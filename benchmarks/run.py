@@ -1,0 +1,33 @@
+"""Benchmark harness: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run footprint  # one section
+
+Each section prints CSV (name,value columns) so EXPERIMENTS.md tables can be
+regenerated from the output.
+"""
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import efficiency, footprint, partition, scaling, throughput
+
+    sections = {
+        "footprint": footprint.run,          # Tables III & V
+        "efficiency": efficiency.run,        # Table VIII + Fig 8 model
+        "scaling": scaling.run,              # Fig 5/8 curves
+        "pathological": scaling.run_pathological,  # §III GC anecdote / Fig 7
+        "partition": partition.run,          # §IV-A sampling partitioner
+        "throughput": throughput.run,        # §IV-D breakdown + variants
+    }
+    pick = sys.argv[1:] or list(sections)
+    t0 = time.time()
+    for name in pick:
+        print(f"\n===== {name} =====")
+        sections[name]()
+    print(f"\n# total bench time: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

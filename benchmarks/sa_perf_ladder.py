@@ -1,0 +1,65 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import time
+
+import numpy as np
+
+from repro.config import SAConfig
+from repro.core.pipeline import build_suffix_array, plan, _exact_shuffle_cap, _shard_inputs
+from repro.core.oracle import naive_sa_reads
+from repro.data.corpus import synth_dna_reads
+
+reads = synth_dna_reads(1200, 100, seed=9)
+n_suffix = reads.shape[0] * (reads.shape[1] + 1)
+ora = naive_sa_reads(reads)
+D = 8
+
+rows = []
+variants = [
+    ("paper-faithful (base-pack, raw-window responses, heuristic caps)",
+     SAConfig(vocab_size=4, packing="base", server_pack=False, adaptive=False)),
+    ("+ server-side key packing (mgetsuffix returns packed words)",
+     SAConfig(vocab_size=4, packing="base", server_pack=True, adaptive=False)),
+    ("+ exact two-phase shuffle capacity (histogram pre-pass)",
+     SAConfig(vocab_size=4, packing="base", server_pack=True, adaptive=True)),
+    ("+ deeper prefix (26 chars: fewer tie rounds)",
+     SAConfig(vocab_size=4, packing="base", server_pack=True, adaptive=True,
+              chars_per_word=13, key_words=2)),
+]
+for name, cfg in variants:
+    t0 = time.perf_counter()
+    res = build_suffix_array(reads, cfg=cfg)
+    dt = time.perf_counter() - t0
+    assert np.array_equal(res.suffix_array, ora), name
+    # padded (actual wire) shuffle bytes: D devices x D buckets x cap x 16B
+    import jax
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.array(jax.devices()), ("sa",))
+    info = plan(reads.shape, cfg, D)
+    cap = info["shuffle_cap"]
+    if cfg.adaptive:
+        data, lens, halo = _shard_inputs(reads, None, cfg, D, info)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        sh = NamedSharding(mesh, P("sa"))
+        cap = _exact_shuffle_cap(reads.shape, cfg, mesh, jax.device_put(data, sh),
+                                 jax.device_put(lens, sh), jax.device_put(halo, sh), info)
+    padded_shuffle = D * D * cap * 16
+    rows.append(dict(
+        variant=name,
+        time_s=round(dt, 2),
+        effective_shuffle_B=res.footprint.shuffle,
+        padded_shuffle_B=padded_shuffle,
+        fetch_request_B=res.footprint.fetch_request,
+        fetch_response_B=res.footprint.fetch_response,
+        rounds=res.stats["rounds"],
+        iters=res.stats["iters"],
+        fetches=res.stats["fetch_requests"],
+    ))
+
+print(json.dumps(rows, indent=1))
+with open("sa_perf.json", "w") as f:
+    json.dump(rows, f, indent=1)

@@ -1,0 +1,68 @@
+"""Paper Fig 5 + Fig 8: scalability_1 curves (time vs input size) and the
+breakdown behaviour.
+
+TeraSort's reduce-side amplification grows with input (Table III: local R/W
+1.03 -> 1.88 units) while the scheme's stays flat — on our adaptation the
+analogue is the materialized-record bytes each pipeline must hold+sort.
+Wall-clock on one CPU host shows the same separation at small scale.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.config import SAConfig
+from repro.core.pipeline import build_suffix_array
+from repro.core.prefix_doubling import build_suffix_array_doubling
+from repro.core.terasort import build_suffix_array_terasort
+from repro.data.corpus import synth_dna_reads, synth_token_corpus
+
+
+def run(sizes=(100, 200, 400, 800, 1600), read_len=60, csv=True):
+    cfg = SAConfig(vocab_size=4, packing="base")
+    rows = []
+    for n in sizes:
+        reads = synth_dna_reads(n, read_len, seed=n)
+        t0 = time.perf_counter()
+        s = build_suffix_array(reads, cfg=cfg)
+        ts = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        t = build_suffix_array_terasort(reads, cfg=cfg)
+        tt = time.perf_counter() - t0
+        rows.append(dict(reads=n, scheme_s=ts, tera_s=tt,
+                         scheme_bytes=s.footprint.total_traffic(),
+                         tera_bytes=t.footprint.shuffle))
+    if csv:
+        print("# Fig 5/8 reproduction — scaling of time & traffic with input")
+        print("reads,scheme_s,tera_s,scheme_traffic_bytes,tera_shuffle_bytes")
+        for r in rows:
+            print(f"{r['reads']},{r['scheme_s']:.2f},{r['tera_s']:.2f},"
+                  f"{r['scheme_bytes']},{r['tera_bytes']}")
+    return rows
+
+
+def run_pathological(reps=(50, 100, 200), csv=True):
+    """Fig 7 / §III GC anecdote: repetitive input (ATAT...) — rounds blow up
+    for K-at-a-time refinement, stay O(log n) for prefix doubling."""
+    cfg = SAConfig(vocab_size=4, chars_per_word=3, key_words=2)
+    rows = []
+    for r in reps:
+        text = np.tile(np.array([1, 2], np.int32), r)
+        s = build_suffix_array(text, cfg=cfg)
+        d = build_suffix_array_doubling(text, cfg=cfg)
+        assert np.array_equal(s.suffix_array, d.suffix_array)
+        rows.append(dict(n=2 * r, scheme_rounds=s.stats["rounds"],
+                         doubling_rounds=d.stats["rounds"]))
+    if csv:
+        print("# pathological repeats — refinement rounds "
+              "(paper's sorting-group blowup vs beyond-paper doubling)")
+        print("n,scheme_rounds,doubling_rounds")
+        for row in rows:
+            print(f"{row['n']},{row['scheme_rounds']},{row['doubling_rounds']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()
+    run_pathological()

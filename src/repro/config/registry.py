@@ -1,0 +1,40 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+Importing :mod:`repro.configs` populates the registry with the 10 assigned
+architectures plus reduced ("tiny") variants used by smoke tests and examples.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+from repro.config.base import ArchConfig
+
+_REGISTRY: Dict[str, Callable[[], ArchConfig]] = {}
+
+
+def register_arch(name: str):
+    def deco(fn: Callable[[], ArchConfig]):
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def get_arch(name: str) -> ArchConfig:
+    # populate on first use
+    import repro.configs  # noqa: F401
+
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {sorted(_REGISTRY)}"
+        )
+    return _REGISTRY[name]()
+
+
+def list_archs(include_tiny: bool = False) -> List[str]:
+    import repro.configs  # noqa: F401
+
+    names = sorted(_REGISTRY)
+    if not include_tiny:
+        names = [n for n in names if not n.startswith("tiny-")]
+    return names

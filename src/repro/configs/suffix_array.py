@@ -1,0 +1,36 @@
+"""The paper's own workload as a selectable config: distributed SA
+construction over the grouper-genome-scale read set (paper §I: 64 GB input,
+325,718,730 reads x ~200 bp -> ~6.7 TB of suffixes).
+
+Used by ``repro.launch.sa_build`` and the SA-pipeline dry-run."""
+from dataclasses import dataclass
+
+from repro.config.base import SAConfig
+
+
+@dataclass(frozen=True)
+class SAWorkload:
+    name: str
+    num_reads: int
+    read_len: int
+    sa: SAConfig
+
+
+def grouper_genome() -> SAWorkload:
+    """The paper's full experiment (dry-run scale)."""
+    return SAWorkload(
+        name="grouper-genome",
+        num_reads=325_718_730,
+        read_len=200,
+        sa=SAConfig(vocab_size=4, packing="base", samples_per_shard=10_000),
+    )
+
+
+def grouper_small() -> SAWorkload:
+    """CPU-runnable slice of the same distribution."""
+    return SAWorkload(
+        name="grouper-small",
+        num_reads=2_000,
+        read_len=64,
+        sa=SAConfig(vocab_size=4, packing="base", samples_per_shard=256),
+    )

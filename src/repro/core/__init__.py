@@ -1,0 +1,6 @@
+"""repro.core — the paper's contribution: scalable distributed suffix-array
+construction with an in-memory data store (see DESIGN.md)."""
+from repro.core.types import Footprint, SAResult, KEY_SENTINEL
+from repro.core.pipeline import build_suffix_array
+
+__all__ = ["Footprint", "SAResult", "KEY_SENTINEL", "build_suffix_array"]

@@ -1,0 +1,142 @@
+"""SPMD collective helpers shared by the SA pipelines and the store.
+
+Everything here runs *inside* ``shard_map`` over a 1-D mesh axis.  The central
+primitive is capacity-padded bucketed exchange — the TPU-native analogue of the
+MapReduce shuffle (static shapes replace Hadoop's dynamic spill files; the
+sentinel-padding discipline replaces the paper's JVM heap management, see
+DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.types import KEY_SENTINEL
+
+
+def axis_size(axis: str) -> int:
+    return lax.axis_size(axis)
+
+
+def pvary(x, axis: str):
+    """Mark a replicated value as device-varying (for while/scan carries)."""
+    try:
+        return lax.pcast(x, (axis,), to="varying")
+    except (AttributeError, TypeError):  # older jax
+        return lax.pvary(x, (axis,))
+
+
+def bucket_scatter(
+    values: jnp.ndarray,
+    bucket: jnp.ndarray,
+    num_buckets: int,
+    capacity: int,
+    fill: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Scatter rows of ``values`` into a (num_buckets, capacity, W) buffer.
+
+    Overflowing rows are dropped (counted).  Returns (buffer, slot, dropped):
+    ``slot[i]`` is the flat buffer slot of row i (or num_buckets*capacity if
+    dropped) so responses can be routed back to requesters.
+    """
+    n, w = values.shape
+    order = jnp.argsort(bucket, stable=True)
+    sb = bucket[order]
+    hist = jnp.bincount(bucket, length=num_buckets)
+    start = jnp.cumsum(hist) - hist
+    pos = jnp.arange(n, dtype=jnp.int32) - start[sb].astype(jnp.int32)
+    ok = pos < capacity
+    flat = jnp.where(ok, sb * capacity + pos, num_buckets * capacity)
+    buf = jnp.full((num_buckets * capacity + 1, w), fill, values.dtype)
+    buf = buf.at[flat].set(values[order])
+    slot = jnp.zeros((n,), jnp.int32).at[order].set(flat.astype(jnp.int32))
+    dropped = jnp.sum(~ok).astype(jnp.int32)
+    return buf[: num_buckets * capacity].reshape(num_buckets, capacity, w), slot, dropped
+
+
+def exchange(buf: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """all_to_all a (D, capacity, W) buffer: out[j] = what device j sent me."""
+    return lax.all_to_all(buf, axis, split_axis=0, concat_axis=0, tiled=True)
+
+
+def lex_bucket(
+    key_hi: jnp.ndarray,
+    key_lo: jnp.ndarray,
+    split_hi: jnp.ndarray,
+    split_lo: jnp.ndarray,
+) -> jnp.ndarray:
+    """bucket = #splitters strictly less than key (lexicographic 2-word).
+
+    Equal keys always map to the same bucket — the MapReduce invariant that
+    one sorting group lands on one reducer (paper §IV-A).
+    """
+    gt = (key_hi[:, None] > split_hi[None, :]) | (
+        (key_hi[:, None] == split_hi[None, :])
+        & (key_lo[:, None] > split_lo[None, :])
+    )
+    return jnp.sum(gt, axis=1).astype(jnp.int32)
+
+
+def sample_splitters(
+    key_hi: jnp.ndarray,
+    key_lo: jnp.ndarray,
+    num_samples: int,
+    axis: str,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """TeraSort-style splitter estimation (paper: 10000 x n_reducers samples).
+
+    Systematic per-shard sampling -> all_gather -> sort -> quantiles.
+    Returns (split_hi, split_lo) of length D-1, identical on every device.
+    """
+    d = lax.axis_size(axis)
+    n = key_hi.shape[0]
+    # even systematic sampling (no end-of-array duplication when s > n)
+    idx = ((jnp.arange(num_samples) * n) // num_samples).astype(jnp.int32)
+    idx = jnp.clip(idx, 0, n - 1)
+    samp_hi, samp_lo = key_hi[idx], key_lo[idx]
+    all_hi = lax.all_gather(samp_hi, axis).reshape(-1)
+    all_lo = lax.all_gather(samp_lo, axis).reshape(-1)
+    s_hi, s_lo = lax.sort((all_hi, all_lo), num_keys=2)
+    total = d * num_samples
+    q = (jnp.arange(1, d) * (total // d)).astype(jnp.int32)
+    return s_hi[q], s_lo[q]
+
+
+def global_exclusive_offsets(count: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """Exclusive prefix sum of a per-device scalar across the axis."""
+    d = lax.axis_size(axis)
+    me = lax.axis_index(axis)
+    counts = lax.all_gather(count, axis)  # (D,)
+    mask = jnp.arange(d) < me
+    return jnp.sum(jnp.where(mask, counts, 0))
+
+
+def neighbor_shift_right(x: jnp.ndarray, axis: str, fill) -> jnp.ndarray:
+    """Each device receives device (i-1)'s value; device 0 gets ``fill``.
+
+    Used to detect equal-key runs spanning device boundaries.
+    """
+    d = lax.axis_size(axis)
+    perm = [(i, i + 1) for i in range(d - 1)]
+    shifted = lax.ppermute(x, axis, perm)
+    me = lax.axis_index(axis)
+    return jnp.where(me == 0, jnp.full_like(x, fill), shifted)
+
+
+def sort_records(rec: jnp.ndarray, num_keys: int = 4) -> jnp.ndarray:
+    """Sort (n, W) int32 records lexicographically by the first num_keys cols."""
+    cols = [rec[:, i] for i in range(rec.shape[1])]
+    out = lax.sort(tuple(cols), num_keys=num_keys)
+    return jnp.stack(out, axis=1)
+
+
+def run_starts(eq_prev: jnp.ndarray) -> jnp.ndarray:
+    """Given eq_prev[i] = (row i equals row i-1), return start index of each
+    run (``group id``): g[i] = i at run starts, propagated by cumulative max."""
+    n = eq_prev.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    cand = jnp.where(eq_prev, jnp.int32(-1), idx)
+    return lax.cummax(cand)

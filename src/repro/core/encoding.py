@@ -1,0 +1,169 @@
+"""Numeric prefix encoding (paper §IV-B, "structural scalability").
+
+The paper encodes the first K characters of a suffix base-(V+1) into a Java
+``long`` ($=0, A=1, C=2, G=3, T=4) so MapReduce shuffles 16-byte numeric
+records instead of ~100-byte strings.  We keep the idea and adapt the layout
+to TPU dtypes (DESIGN.md §2):
+
+* tokens are stored as int32 in ``[1, V]`` with ``0`` reserved for the
+  paper's ``$`` delimiter / padding — the natural zero-padding of short
+  windows therefore *is* the delimiter, and lexicographic order of packed
+  words equals lexicographic order of (padded) token windows;
+* a key is ``key_words`` int31 words, each packing ``chars_per_word`` tokens
+  either base-(V+1) (paper-faithful multiply packing) or bit-shift packing
+  (TPU-optimized), both order-preserving;
+* keys sort with ``jax.lax.sort(..., num_keys=2)`` — no int64 anywhere.
+
+This module is the canonical jnp implementation; ``repro.kernels.prefix_pack``
+is the Pallas VMEM-tiled version of the hot loop and is validated against
+this file.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import SAConfig
+from repro.core.types import KEY_SENTINEL, pack_index
+
+
+def pack_words(window: jnp.ndarray, cfg: SAConfig, n_words: int | None = None) -> jnp.ndarray:
+    """Pack token windows into key words.
+
+    Args:
+      window: (..., K) int32 tokens in [0, vocab]; K = n_words * chars_per_word
+        (default n_words = cfg.key_words, K = cfg.prefix_len).
+    Returns:
+      (..., n_words) int32, each word in [0, 2^31).
+    """
+    cpw = cfg.resolved_chars_per_word()
+    n_words = cfg.key_words if n_words is None else n_words
+    k = cpw * n_words
+    assert window.shape[-1] == k, (window.shape, k)
+    words = []
+    for w in range(n_words):
+        chunk = window[..., w * cpw : (w + 1) * cpw]
+        if cfg.packing == "base":
+            acc = jnp.zeros(chunk.shape[:-1], jnp.int32)
+            for j in range(cpw):
+                acc = acc * (cfg.vocab_size + 1) + chunk[..., j]
+        else:  # bit packing
+            bits = max(1, cfg.vocab_size.bit_length())
+            acc = jnp.zeros(chunk.shape[:-1], jnp.int32)
+            for j in range(cpw):
+                acc = (acc << bits) | chunk[..., j]
+            # left-align so shorter-filled words still compare correctly
+            acc = acc << (31 - bits * cpw)
+        words.append(acc)
+    return jnp.stack(words, axis=-1)
+
+
+def unpack_words_np(words: np.ndarray, cfg: SAConfig) -> np.ndarray:
+    """Inverse of :func:`pack_words` (numpy, for tests)."""
+    cpw = cfg.resolved_chars_per_word()
+    out = []
+    for w in range(cfg.key_words):
+        acc = words[..., w].astype(np.int64)
+        toks = []
+        if cfg.packing == "base":
+            for _ in range(cpw):
+                toks.append(acc % (cfg.vocab_size + 1))
+                acc //= cfg.vocab_size + 1
+            toks.reverse()
+        else:
+            bits = max(1, int(cfg.vocab_size).bit_length())
+            acc >>= 31 - bits * cpw
+            for _ in range(cpw):
+                toks.append(acc & ((1 << bits) - 1))
+                acc >>= bits
+            toks.reverse()
+        out.extend(toks)
+    return np.stack(out, axis=-1).astype(np.int32)
+
+
+def window_at(reads: jnp.ndarray, row: jnp.ndarray, offset: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Gather k-token windows ``reads[row, offset:offset+k]`` (0-padded).
+
+    reads: (R, L) int32.  row/offset: (M,).  Returns (M, k).
+    Reference implementation of the ``mgetsuffix`` server-side gather; the
+    Pallas scalar-prefetch kernel (`repro.kernels.window_gather`) matches it.
+    """
+    R, L = reads.shape
+    padded = jnp.pad(reads, ((0, 1), (0, k)))  # row R = all-zero guard row
+    row = jnp.where((row >= 0) & (row < R), row, R)
+    offset = jnp.clip(offset, 0, L)
+    cols = offset[:, None] + jnp.arange(k)[None, :]
+    return padded[row[:, None], cols]
+
+
+def all_suffix_windows(reads: jnp.ndarray, k: int) -> jnp.ndarray:
+    """(R, L) reads -> (R, L+1, k) windows for offsets 0..L (incl. $-suffix)."""
+    R, L = reads.shape
+    padded = jnp.pad(reads, ((0, 0), (0, k)))
+    cols = jnp.arange(L + 1)[:, None] + jnp.arange(k)[None, :]  # (L+1, k)
+    return padded[:, cols]
+
+
+def make_records_reads(
+    reads: jnp.ndarray,
+    lengths: jnp.ndarray,
+    cfg: SAConfig,
+    read_id_base: int | jnp.ndarray = 0,
+    stride_bits: int = 0,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Map phase over a shard of reads: every suffix -> 16-byte record.
+
+    Returns (records, valid):
+      records: (R*(L+1), 4) int32 [key_hi, key_lo, idx_hi, idx_lo]
+      valid:   (R*(L+1),) bool — offset <= length (invalid slots carry
+               KEY_SENTINEL keys and sort to the end, mirroring the padding
+               discipline used throughout the pipeline)
+    """
+    R, L = reads.shape
+    if stride_bits == 0:
+        stride_bits = int(np.ceil(np.log2(L + 1)))
+    k = cfg.prefix_len
+    win = all_suffix_windows(reads, k)  # (R, L+1, k)
+    keys = pack_words(win, cfg)  # (R, L+1, 2)
+    offs = jnp.arange(L + 1, dtype=jnp.int32)
+    valid = offs[None, :] <= lengths[:, None]  # (R, L+1)
+    rows = jnp.arange(R, dtype=jnp.int32)[:, None] + jnp.int32(read_id_base)
+    rows = jnp.broadcast_to(rows, (R, L + 1))
+    offs_b = jnp.broadcast_to(offs[None, :], (R, L + 1))
+    idx_hi, idx_lo = pack_index(rows, offs_b, stride_bits)
+    key_hi = jnp.where(valid, keys[..., 0], KEY_SENTINEL)
+    key_lo = jnp.where(valid, keys[..., 1], KEY_SENTINEL)
+    rec = jnp.stack(
+        [key_hi, key_lo, idx_hi, idx_lo], axis=-1
+    ).reshape(R * (L + 1), 4)
+    return rec, valid.reshape(-1)
+
+
+def make_records_text(
+    text: jnp.ndarray,
+    cfg: SAConfig,
+    pos_base: int | jnp.ndarray = 0,
+    n_emit: int | None = None,
+) -> jnp.ndarray:
+    """Long-text mode map phase: (n,) tokens -> (n_emit, 4) records.
+
+    Global index = absolute position (stride_bits = 0 semantics: idx packs the
+    position itself).  Windows past the end 0-pad, which orders shorter
+    suffixes first on equal prefixes — no explicit sentinel required.
+
+    In the distributed pipeline ``text`` is the local shard *plus its right
+    halo* and ``n_emit`` is the shard length, so boundary windows see the
+    neighbour's tokens instead of padding.
+    """
+    n = text.shape[0]
+    m = n if n_emit is None else n_emit
+    k = cfg.prefix_len
+    padded = jnp.pad(text, (0, k))
+    cols = jnp.arange(m)[:, None] + jnp.arange(k)[None, :]
+    keys = pack_words(padded[cols], cfg)  # (m, 2)
+    pos = jnp.arange(m, dtype=jnp.int32) + jnp.int32(pos_base)
+    idx_hi = jnp.zeros((m,), jnp.int32)
+    return jnp.stack([keys[..., 0], keys[..., 1], idx_hi, pos], axis=-1)

@@ -1,0 +1,498 @@
+"""Distributed suffix-array construction — the paper's scheme (§IV).
+
+Dataflow per device (inside ``shard_map`` over a flat 1-D mesh):
+
+  Map      : every local suffix -> 16-byte record (prefix key + packed index)
+             [repro.core.encoding / kernels.prefix_pack]
+  Sample   : TeraSort-style splitter estimation  [distributed.sample_splitters]
+  Shuffle  : one all_to_all of records — *indexes move, suffixes stay put*
+  Reduce   : lax.sort by (key, index); tie groups refine by fetching the next
+             K-token window from the in-memory store (mgetsuffix) inside a
+             lax.while_loop until psum(ties)==0
+  Output   : per-device sorted index runs == the global suffix array
+
+Static-shape discipline (TPU): the shuffle capacity is sized *exactly* by a
+cheap histogram pre-pass (``cfg.adaptive``, two-phase planning — the TPU
+analogue of the paper's up-front sampling); store fetches that overflow their
+capacity are retried with **group-synchronous advancement**: a tie group only
+consumes its next K-token window when every active member's request was
+served, so partial service can never produce an inconsistent comparison.
+
+The same entry point drives the read-set mode (the paper's bioinformatics
+case, incl. paired-end: concatenate both files' reads) and the long-text
+mode (LM-corpus dedup).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import SAConfig
+from repro.core import encoding
+from repro.core.distributed import (
+    bucket_scatter,
+    pvary,
+    exchange,
+    lex_bucket,
+    run_starts,
+    sample_splitters,
+)
+from repro.core.store import StoreSpec, mget_window, token_bytes
+from repro.core.types import (
+    KEY_SENTINEL,
+    Footprint,
+    SAResult,
+    global_index,
+    unpack_index,
+)
+
+AXIS = "sa"
+
+
+def _flat_mesh(mesh: Optional[Mesh]) -> Mesh:
+    if mesh is not None:
+        return mesh
+    devs = np.array(jax.devices())
+    return Mesh(devs, (AXIS,))
+
+
+def _tied(g: jnp.ndarray) -> jnp.ndarray:
+    prev = jnp.concatenate([jnp.array([-1], g.dtype), g[:-1]])
+    nxt = jnp.concatenate([g[1:], jnp.array([-2], g.dtype)])
+    return (g == prev) | (g == nxt)
+
+
+def _map_phase(reads_l, lengths_l, halo_l, *, cfg, rows_per_shard, stride_bits,
+               text_mode, text_len):
+    """Map + sample + bucket (shared by the histogram pre-pass and main run)."""
+    me = lax.axis_index(AXIS)
+    if text_mode:
+        flat = jnp.concatenate([reads_l.reshape(-1), halo_l.reshape(-1)])
+        if cfg.use_pallas:
+            from repro.kernels import ops as kops
+
+            keys = kops.prefix_pack(flat, cfg)[:rows_per_shard]
+            pos_col = (
+                jnp.arange(rows_per_shard, dtype=jnp.int32) + me * rows_per_shard
+            )
+            rec = jnp.stack(
+                [keys[:, 0], keys[:, 1], jnp.zeros_like(pos_col), pos_col], axis=-1
+            )
+        else:
+            rec = encoding.make_records_text(
+                flat, cfg, pos_base=me * rows_per_shard, n_emit=rows_per_shard
+            )
+        pos = jnp.arange(rows_per_shard, dtype=jnp.int32) + me * rows_per_shard
+        valid0 = pos < text_len
+        rec = jnp.where(valid0[:, None], rec, jnp.full_like(rec, KEY_SENTINEL))
+    else:
+        rec, valid0 = encoding.make_records_reads(
+            reads_l,
+            lengths_l,
+            cfg,
+            read_id_base=me * rows_per_shard,
+            stride_bits=stride_bits,
+        )
+        rec = jnp.where(valid0[:, None], rec, jnp.full_like(rec, KEY_SENTINEL))
+    s_hi, s_lo = sample_splitters(rec[:, 0], rec[:, 1], cfg.samples_per_shard, AXIS)
+    bucket = lex_bucket(rec[:, 0], rec[:, 1], s_hi, s_lo)
+    # invalid padding records go to a local dump bucket, never shipped
+    nb = lax.axis_size(AXIS)
+    bucket = jnp.where(valid0.reshape(-1), bucket, jnp.int32(nb))
+    return rec, valid0, bucket
+
+
+def _hist_fn(reads_l, lengths_l, halo_l, *, cfg, num_shards, rows_per_shard,
+             stride_bits, text_mode, text_len, **_):
+    """Pre-pass: per-(sender,bucket) record counts -> exact shuffle capacity."""
+    _, _, bucket = _map_phase(
+        reads_l, lengths_l, halo_l, cfg=cfg, rows_per_shard=rows_per_shard,
+        stride_bits=stride_bits, text_mode=text_mode, text_len=text_len,
+    )
+    hist = jnp.bincount(bucket, length=num_shards + 1)[:num_shards]
+    return hist[None, :].astype(jnp.int32)
+
+
+def _device_fn(
+    reads_l: jnp.ndarray,
+    lengths_l: jnp.ndarray,
+    halo_l: jnp.ndarray,
+    *,
+    cfg: SAConfig,
+    num_shards: int,
+    rows_per_shard: int,
+    row_len: int,
+    stride_bits: int,
+    shuffle_cap: int,
+    fetch_cap: int,
+    max_rounds: int,
+    uniform_len: Optional[int],
+    text_mode: bool,
+    text_len: int,
+):
+    """Per-device SA pipeline body (runs under shard_map)."""
+    d = num_shards
+    k = cfg.prefix_len
+
+    rec, valid0, bucket = _map_phase(
+        reads_l, lengths_l, halo_l, cfg=cfg, rows_per_shard=rows_per_shard,
+        stride_bits=stride_bits, text_mode=text_mode, text_len=text_len,
+    )
+    n_valid_local = jnp.sum(valid0).astype(jnp.int32)
+
+    # ---- Shuffle: the 16-byte-record all_to_all ----------------------
+    buf, slot, _ = bucket_scatter(rec, bucket, d + 1, shuffle_cap, KEY_SENTINEL)
+    drop_shuffle = jnp.sum(
+        valid0.reshape(-1) & (slot >= d * shuffle_cap)
+    ).astype(jnp.int32)
+    recv = exchange(buf[:d], AXIS).reshape(d * shuffle_cap, 4)
+    n = recv.shape[0]
+
+    # ---- Reduce: initial sort ----------------------------------------
+    kh, kl, ih, il = (recv[:, i] for i in range(4))
+    kh, kl, ih, il = lax.sort((kh, kl, ih, il), num_keys=4)
+    validr = ih != KEY_SENTINEL
+
+    eq = jnp.concatenate(
+        [jnp.array([False]), (kh[1:] == kh[:-1]) & (kl[1:] == kl[:-1])]
+    )
+    eq = eq & validr
+    g = run_starts(eq)
+
+    # exhausted = the first depth*K tokens already covered the whole suffix.
+    # Analytic when remaining length is locally computable (text mode /
+    # uniform reads — the paper's skip-the-short-suffixes trick, §IV-B);
+    # variable-length reads resolve lazily via fetch-response flags.
+    analytic = text_mode or (uniform_len is not None)
+
+    def _exhausted_at(ihh, ill, depth):
+        if text_mode:
+            rem = text_len - ill
+        else:
+            _, off = unpack_index(ihh, ill, stride_bits)
+            rem = uniform_len - off
+        return rem <= depth * k
+
+    if analytic:
+        exhausted = _exhausted_at(ih, il, jnp.int32(1))
+    else:
+        exhausted = jnp.zeros_like(validr)  # resolved lazily via fetch flags
+    exhausted = exhausted | ~validr
+
+    spec = StoreSpec(
+        axis=AXIS,
+        num_shards=d,
+        rows_per_shard=rows_per_shard,
+        row_len=row_len,
+        request_capacity=fetch_cap,
+    )
+    # text mode: local store shard = tokens + right halo so windows starting
+    # near the shard boundary stay a single-owner lookup.
+    if text_mode:
+        store_local = jnp.concatenate([reads_l.reshape(-1), halo_l.reshape(-1)])
+        store_local = store_local[:, None]
+    else:
+        store_local = reads_l
+
+    zero = pvary(jnp.int32(0), AXIS)
+    depth0 = pvary(jnp.ones((n,), jnp.int32), AXIS)  # K tokens consumed
+    stats0 = dict(
+        iters=zero,
+        fetch_requests=zero,
+        fetch_request_bytes=zero,
+        fetch_response_bytes=zero,
+        retries=zero,
+        max_depth=zero + 1,
+    )
+    hard_cap = 2 * max_rounds + 8
+
+    def cond(carry):
+        g, ih, il, exhausted, depth, stats = carry
+        active = _tied(g) & ~exhausted & (ih != KEY_SENTINEL)
+        total = lax.psum(jnp.sum(active), AXIS)
+        return (total > 0) & (stats["iters"] < hard_cap)
+
+    def body(carry):
+        g, ih, il, exhausted, depth, stats = carry
+        validr = ih != KEY_SENTINEL
+        if analytic:
+            exhausted = _exhausted_at(ih, il, depth) | ~validr
+        active = _tied(g) & ~exhausted & validr
+        if text_mode:
+            row = il + depth * k  # absolute window start owns the request
+            off = jnp.zeros_like(il)
+        else:
+            row, off0 = unpack_index(ih, il, stride_bits)
+            off = off0 + depth * k
+        resp, exh_new, ok, fs = mget_window(store_local, row, off, active, spec, cfg)
+        if cfg.server_pack:
+            words = resp  # packed server-side (beyond-paper compression)
+        else:
+            words = encoding.pack_words(resp, cfg)
+        # group-synchronous advance: a group consumes its window only if every
+        # active member was served; otherwise the whole group retries.
+        member_ok = jnp.where(active, ok, True).astype(jnp.int32)
+        seg_ok = jax.ops.segment_min(member_ok, g, num_segments=n)
+        adv = (seg_ok[jnp.clip(g, 0, n - 1)] > 0) & validr
+        nk_hi = jnp.where(adv & active, words[:, 0], 0)
+        nk_lo = jnp.where(adv & active, words[:, 1], 0)
+        if not analytic:
+            exhausted = jnp.where(adv & active, exh_new, exhausted)
+        depth = jnp.where(adv & active, depth + 1, depth)
+        exh_i = exhausted.astype(jnp.int32)
+        g, nk_hi, nk_lo, ih, il, exh_i, depth = lax.sort(
+            (g, nk_hi, nk_lo, ih, il, exh_i, depth), num_keys=5
+        )
+        exhausted = exh_i > 0
+        validr = ih != KEY_SENTINEL
+        eq = jnp.concatenate(
+            [
+                jnp.array([False]),
+                (g[1:] == g[:-1])
+                & (nk_hi[1:] == nk_hi[:-1])
+                & (nk_lo[1:] == nk_lo[:-1]),
+            ]
+        )
+        eq = eq & validr
+        g = run_starts(eq)
+        stats = dict(
+            iters=stats["iters"] + 1,
+            fetch_requests=stats["fetch_requests"] + fs.requests,
+            fetch_request_bytes=stats["fetch_request_bytes"] + fs.request_bytes,
+            fetch_response_bytes=stats["fetch_response_bytes"] + fs.response_bytes,
+            retries=stats["retries"] + fs.dropped,
+            max_depth=jnp.maximum(stats["max_depth"], jnp.max(depth)),
+        )
+        return (g, ih, il, exhausted, depth, stats)
+
+    g, ih, il, exhausted, depth, stats = lax.while_loop(
+        cond, body, (g, ih, il, exhausted, depth0, stats0)
+    )
+
+    # unresolved = groups still tied and not exhausted when hard_cap hit
+    unresolved = jnp.sum(
+        _tied(g) & ~exhausted & (ih != KEY_SENTINEL)
+    ).astype(jnp.int32)
+    count = jnp.sum(ih != KEY_SENTINEL).astype(jnp.int32)
+    statvec = jnp.stack(
+        [
+            count,
+            n_valid_local,
+            stats["iters"],
+            stats["fetch_requests"],
+            stats["fetch_request_bytes"],
+            stats["fetch_response_bytes"],
+            drop_shuffle,
+            stats["retries"],
+            unresolved,
+            stats["max_depth"],
+        ]
+    )
+    return ih, il, statvec[None, :]
+
+
+def plan(corpus_shape, cfg: SAConfig, num_shards: int, lengths=None):
+    """Static planning shared by run and dry-run paths."""
+    text_mode = len(corpus_shape) == 1
+    if text_mode:
+        n = corpus_shape[0]
+        rows_per_shard = -(-n // num_shards)
+        row_len, l = 1, 1
+        stride_bits = 0
+        n_local = rows_per_shard
+        text_len = n
+        uniform_len = None
+    else:
+        r, l = corpus_shape
+        rows_per_shard = -(-r // num_shards)
+        row_len = l
+        stride_bits = int(math.ceil(math.log2(l + 1)))
+        n_local = rows_per_shard * (l + 1)
+        text_len = 0
+        uniform_len = l if lengths is None else None
+    shuffle_cap = max(1, int(math.ceil(n_local * cfg.shuffle_slack / num_shards)))
+    if cfg.max_rounds:
+        max_rounds = cfg.max_rounds
+    elif text_mode:
+        max_rounds = int(math.ceil(corpus_shape[0] / cfg.prefix_len)) + 1
+    else:
+        max_rounds = int(math.ceil((l + 1) / cfg.prefix_len)) + 1
+    return dict(
+        text_mode=text_mode,
+        rows_per_shard=rows_per_shard,
+        row_len=row_len,
+        stride_bits=stride_bits,
+        shuffle_cap=shuffle_cap,
+        max_rounds=max_rounds,
+        uniform_len=uniform_len,
+        text_len=text_len,
+        n_local=n_local,
+    )
+
+
+def _shard_inputs(corpus, lengths, cfg: SAConfig, d: int, info):
+    corpus = np.asarray(corpus, np.int32)
+    rows = info["rows_per_shard"]
+    k = cfg.prefix_len
+    if info["text_mode"]:
+        pad = rows * d - corpus.shape[0]
+        flat = np.pad(corpus, (0, pad))
+        data = flat.reshape(d * rows, 1)
+        lens = np.zeros((d * rows,), np.int32)
+        halo = np.zeros((d, k), np.int32)
+        for i in range(d - 1):
+            seg = flat[(i + 1) * rows : min((i + 1) * rows + k, d * rows)]
+            halo[i, : seg.shape[0]] = seg
+        halo = halo.reshape(d * k)
+    else:
+        r, l = corpus.shape
+        pad = rows * d - r
+        data = np.pad(corpus, ((0, pad), (0, 0)))
+        if lengths is None:
+            lens = np.concatenate(
+                [np.full((r,), l, np.int32), np.full((pad,), -1, np.int32)]
+            )
+        else:
+            lens = np.concatenate(
+                [np.asarray(lengths, np.int32), np.full((pad,), -1, np.int32)]
+            )
+        halo = np.zeros((d,), np.int32)
+    return data, lens, halo
+
+
+def make_pipeline(corpus_shape, cfg: SAConfig, mesh: Mesh, lengths=None,
+                  shuffle_cap: Optional[int] = None):
+    """Build the jitted shard_map'd pipeline for given static shapes.
+
+    Returns (jitted_fn, info).  Usable both for execution and for
+    ``.lower()`` in the multi-pod dry-run.
+    """
+    d = mesh.devices.size
+    info = plan(corpus_shape, cfg, d, lengths)
+    if shuffle_cap is not None:
+        info = dict(info, shuffle_cap=shuffle_cap)
+    fetch_cap = max(
+        1,
+        int(math.ceil(d * info["shuffle_cap"] * cfg.fetch_fraction
+                      * cfg.shuffle_slack / d)),
+    )
+    fn = partial(
+        _device_fn,
+        cfg=cfg,
+        num_shards=d,
+        rows_per_shard=info["rows_per_shard"],
+        row_len=info["row_len"],
+        stride_bits=info["stride_bits"],
+        shuffle_cap=info["shuffle_cap"],
+        fetch_cap=fetch_cap,
+        max_rounds=info["max_rounds"],
+        uniform_len=info["uniform_len"],
+        text_mode=info["text_mode"],
+        text_len=info["text_len"],
+    )
+    smapped = jax.shard_map(
+        fn, mesh=mesh, in_specs=(P(AXIS), P(AXIS), P(AXIS)),
+        out_specs=(P(AXIS), P(AXIS), P(AXIS)),
+        # interpret-mode Pallas mixes varying/unvarying internals; relax the
+        # vma checker when kernels are routed through pallas_call.
+        check_vma=not cfg.use_pallas,
+    )
+    return jax.jit(smapped), info
+
+
+def _exact_shuffle_cap(corpus_shape, cfg, mesh, data, lens, halo, info) -> int:
+    """Histogram pre-pass: exact max per-(sender,bucket) count."""
+    d = mesh.devices.size
+    fn = partial(
+        _hist_fn,
+        cfg=cfg,
+        num_shards=d,
+        rows_per_shard=info["rows_per_shard"],
+        stride_bits=info["stride_bits"],
+        text_mode=info["text_mode"],
+        text_len=info["text_len"],
+    )
+    smapped = jax.shard_map(
+        fn, mesh=mesh, in_specs=(P(AXIS), P(AXIS), P(AXIS)), out_specs=P(AXIS),
+        check_vma=not cfg.use_pallas,
+    )
+    hist = np.asarray(jax.jit(smapped)(data, lens, halo))
+    return max(1, int(hist.max()))
+
+
+def build_suffix_array(
+    corpus,
+    lengths=None,
+    cfg: SAConfig = SAConfig(),
+    mesh: Optional[Mesh] = None,
+) -> SAResult:
+    """Build the suffix array of ``corpus`` with the paper's scheme.
+
+    corpus: (R, L) int32 reads (tokens 1..V, 0 padding) or (n,) int32 text.
+    """
+    mesh = _flat_mesh(mesh)
+    d = mesh.devices.size
+    info = plan(np.shape(corpus), cfg, d, lengths)
+    data, lens, halo = _shard_inputs(corpus, lengths, cfg, d, info)
+    sharding = NamedSharding(mesh, P(AXIS))
+    data = jax.device_put(data, sharding)
+    lens = jax.device_put(lens, sharding)
+    halo = jax.device_put(halo, sharding)
+
+    shuffle_cap = None
+    if cfg.adaptive:
+        shuffle_cap = _exact_shuffle_cap(
+            np.shape(corpus), cfg, mesh, data, lens, halo, info
+        )
+    jitted, info = make_pipeline(
+        np.shape(corpus), cfg, mesh, lengths, shuffle_cap=shuffle_cap
+    )
+    ih, il, statmat = jitted(data, lens, halo)
+    return _finalize(
+        np.asarray(ih), np.asarray(il), np.asarray(statmat), corpus, cfg
+    )
+
+
+def _finalize(ih, il, statmat, corpus, cfg: SAConfig) -> SAResult:
+    d = statmat.shape[0]
+    per_dev = ih.shape[0] // d
+    chunks = []
+    for i in range(d):
+        lo = i * per_dev
+        cnt = int(statmat[i, 0])
+        chunks.append(global_index(ih[lo : lo + cnt], il[lo : lo + cnt]))
+    sa = np.concatenate(chunks) if chunks else np.zeros((0,), np.int64)
+
+    corpus = np.asarray(corpus)
+    tb = token_bytes(cfg.vocab_size)
+    n_suffix = int(statmat[:, 1].sum())
+    fp = Footprint(
+        input=int(corpus.size) * tb,
+        store_put=int(corpus.size) * tb,
+        shuffle=n_suffix * 16,
+        fetch_request=int(statmat[:, 4].sum()),
+        fetch_response=int(statmat[:, 5].sum()),
+        materialized=0,
+        output=n_suffix * 8,
+        rounds=int(statmat[:, 9].max()) if d else 0,
+        dropped=int(statmat[:, 6].sum()),
+    )
+    stats = {
+        "num_suffixes": n_suffix,
+        "emitted": int(sa.shape[0]),
+        "per_device_counts": statmat[:, 0].tolist(),
+        "fetch_requests": int(statmat[:, 3].sum()),
+        "iters": int(statmat[:, 2].max()),
+        "rounds": fp.rounds,
+        "dropped": fp.dropped,
+        "retries": int(statmat[:, 7].sum()),
+        "unresolved": int(statmat[:, 8].sum()),
+    }
+    return SAResult(suffix_array=sa, footprint=fp, stats=stats)

@@ -1,0 +1,106 @@
+"""Pattern matching over the constructed suffix array (paper §I: "SA is a
+cardinal data structure in many pattern matching applications").
+
+Classic O(|P| log n) binary search over SA order, working directly against
+the same corpus layouts the pipelines produce (read-set or long-text),
+suffix content served by the same window semantics as the store.  This is
+the *consumer* side of the index the paper builds: sequence alignment seeds,
+substring counting (infini-gram style), contamination lookup.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+
+def _suffix_tokens_text(text: np.ndarray, pos: int, k: int) -> np.ndarray:
+    w = text[pos : pos + k]
+    if len(w) < k:
+        w = np.concatenate([w, np.zeros(k - len(w), text.dtype)])
+    return w
+
+
+def _cmp_pattern(text: np.ndarray, pos: int, pat: np.ndarray) -> int:
+    """-1 if suffix < pat, 0 if pat is a prefix of suffix, +1 if suffix > pat."""
+    w = _suffix_tokens_text(text, int(pos), len(pat))
+    for a, b in zip(w, pat):
+        if a < b:
+            return -1
+        if a > b:
+            return 1
+    return 0
+
+
+def search_text(text: np.ndarray, sa: np.ndarray, pattern) -> Tuple[int, int]:
+    """Return the [lo, hi) SA range whose suffixes start with ``pattern``."""
+    pat = np.asarray(pattern, text.dtype)
+    lo, hi = 0, len(sa)
+    while lo < hi:  # lower bound
+        mid = (lo + hi) // 2
+        if _cmp_pattern(text, sa[mid], pat) < 0:
+            lo = mid + 1
+        else:
+            hi = mid
+    start = lo
+    hi = len(sa)
+    while lo < hi:  # upper bound
+        mid = (lo + hi) // 2
+        if _cmp_pattern(text, sa[mid], pat) <= 0:
+            lo = mid + 1
+        else:
+            hi = mid
+    return start, lo
+
+
+def count_occurrences(text: np.ndarray, sa: np.ndarray, pattern) -> int:
+    lo, hi = search_text(text, sa, pattern)
+    return hi - lo
+
+
+def find_occurrences(text: np.ndarray, sa: np.ndarray, pattern) -> List[int]:
+    lo, hi = search_text(text, sa, pattern)
+    return sorted(int(p) for p in sa[lo:hi])
+
+
+def align_reads(
+    reads: np.ndarray,
+    sa_gidx: np.ndarray,
+    stride_bits: int,
+    pattern,
+) -> List[Tuple[int, int]]:
+    """Seed-alignment lookup over a read-set SA (the paper's bioinformatics
+    application): all (read_id, offset) whose suffix starts with pattern."""
+    pat = np.asarray(pattern, reads.dtype)
+    r_ids = (sa_gidx >> stride_bits).astype(np.int64)
+    offs = (sa_gidx & ((1 << stride_bits) - 1)).astype(np.int64)
+    l = reads.shape[1]
+
+    def cmp(i: int) -> int:
+        row, off = int(r_ids[i]), int(offs[i])
+        w = reads[row, off : off + len(pat)]
+        if len(w) < len(pat):
+            w = np.concatenate([w, np.zeros(len(pat) - len(w), reads.dtype)])
+        for a, b in zip(w, pat):
+            if a < b:
+                return -1
+            if a > b:
+                return 1
+        return 0
+
+    lo, hi = 0, len(sa_gidx)
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if cmp(mid) < 0:
+            lo = mid + 1
+        else:
+            hi = mid
+    start = lo
+    hi = len(sa_gidx)
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if cmp(mid) <= 0:
+            lo = mid + 1
+        else:
+            hi = mid
+    return sorted((int(r_ids[i]), int(offs[i])) for i in range(start, lo))

@@ -1,0 +1,230 @@
+"""ShardedStore — the distributed in-memory data store (paper §IV, Redis).
+
+"Keeping only the raw data in place": the corpus lives sharded across device
+HBM; everything else communicates *indexes*.  ``mget_window`` is the TPU-native
+``mgetsuffix`` (the paper's custom batched Redis command): an aggregated batch
+of suffix indexes is routed to owner devices with one all_to_all, owners gather
+the K-token windows from their resident shard, and a second all_to_all returns
+the windows (or — beyond-paper ``server_pack`` — the already-packed key words,
+halving response bytes the same way mgetsuffix halves them vs whole reads).
+
+Placement: the paper places read ``seq mod n``; we place contiguous row blocks
+(``owner = row // rows_per_shard``) which is the same O(1) arithmetic but keeps
+halo windows local in long-text mode (DESIGN.md §2).
+
+All methods are *per-device* functions meant to be called inside ``shard_map``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import SAConfig
+from repro.core import encoding
+from repro.core.distributed import bucket_scatter, exchange
+from repro.core.types import KEY_SENTINEL
+
+
+@dataclass(frozen=True)
+class StoreSpec:
+    """Static layout of the sharded store."""
+
+    axis: str
+    num_shards: int
+    rows_per_shard: int  # reads mode: rows; text mode: tokens
+    row_len: int  # L (reads) or 1 (text)
+    request_capacity: int  # per-destination all_to_all capacity
+
+    @property
+    def is_text(self) -> bool:
+        return self.row_len == 1
+
+
+@dataclass
+class FetchStats:
+    """Per-call effective/padded byte counters (jnp scalars)."""
+
+    requests: jnp.ndarray
+    request_bytes: jnp.ndarray
+    response_bytes: jnp.ndarray
+    padded_request_bytes: int
+    padded_response_bytes: int
+    dropped: jnp.ndarray
+
+
+def token_bytes(vocab_size: int) -> int:
+    """Bytes per raw token for footprint accounting (paper counts chars)."""
+    return max(1, (max(vocab_size, 1).bit_length() + 7) // 8)
+
+
+def mget_window(
+    local_rows: jnp.ndarray,
+    row_id: jnp.ndarray,
+    offset: jnp.ndarray,
+    active: jnp.ndarray,
+    spec: StoreSpec,
+    cfg: SAConfig,
+    window: Optional[int] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, FetchStats]:
+    """Batched remote window fetch ("mgetsuffix").
+
+    Args:
+      local_rows: this device's resident shard, (rows_per_shard, L) int32
+        (text mode: (rows_per_shard,) tokens, treated as rows of length 1 —
+        windows then span following rows via the flattened layout).
+      row_id/offset: (M,) int32 *global* row ids and offsets to fetch.
+      active: (M,) bool — inactive slots are not routed (zero windows).
+      window: tokens per window (default cfg.prefix_len).
+    Returns:
+      (win_or_words, exhausted, ok, stats):
+        win_or_words: (M, K) raw token windows, or (M, key_words) packed words
+          when cfg.server_pack (beyond-paper response compression);
+        exhausted: (M,) bool — the window ran past the end of the suffix;
+        ok: (M,) bool — request was actually served (False = capacity drop,
+          the caller must retry; see pipeline group-synchronous retry).
+    """
+    k = window or cfg.prefix_len
+    d, cap = spec.num_shards, spec.request_capacity
+    m = row_id.shape[0]
+
+    owner = jnp.where(
+        active, (row_id // spec.rows_per_shard).astype(jnp.int32), jnp.int32(d)
+    )
+    owner = jnp.clip(owner, 0, d)  # inactive -> dump bucket d (dropped slot)
+    reqs = jnp.stack(
+        [jnp.where(active, row_id, -1), jnp.where(active, offset, 0)], axis=1
+    )
+    # bucket over d+1 buckets; bucket d is a local dump that is never sent.
+    buf, slot, _ = bucket_scatter(reqs, owner, d + 1, cap, fill=-1)
+    send = buf[:d]
+    # true overflow drops: active requests that landed past their bucket cap
+    dropped = jnp.sum(active & (slot >= d * cap)).astype(jnp.int32)
+
+    recv = exchange(send, spec.axis)  # (d, cap, 2) requests from each device
+    req_row = recv[..., 0].reshape(-1)
+    req_off = recv[..., 1].reshape(-1)
+    base = lax.axis_index(spec.axis) * spec.rows_per_shard
+    local_row = jnp.where(req_row >= 0, req_row - base, -1)
+
+    if spec.is_text:
+        flat = local_rows.reshape(-1)
+        windows = _text_window(flat, local_row, req_off, k)
+    elif cfg.use_pallas:
+        from repro.kernels import ops as kops  # Pallas mgetsuffix gather
+
+        windows = kops.window_gather(local_rows, local_row, req_off, k)
+    else:
+        windows = encoding.window_at(local_rows, local_row, req_off, k)
+    # suffix ends inside this window  =>  contains padding zeros
+    exhausted_w = jnp.any(windows == 0, axis=-1)
+
+    if cfg.server_pack:
+        words = encoding.pack_words(windows, cfg)  # (d*cap, key_words)
+        payload = jnp.concatenate(
+            [words, exhausted_w[:, None].astype(jnp.int32)], axis=1
+        )
+        resp_width = cfg.key_words
+        per_resp_bytes = 4 * cfg.key_words
+    else:  # paper-faithful: ship the raw window tokens
+        payload = jnp.concatenate(
+            [windows, exhausted_w[:, None].astype(jnp.int32)], axis=1
+        )
+        resp_width = k
+        per_resp_bytes = k * token_bytes(cfg.vocab_size)
+
+    resp = exchange(payload.reshape(d, cap, resp_width + 1), spec.axis)
+    flatresp = resp.reshape(d * cap, resp_width + 1)
+    # route responses back to the original request slots
+    guard = jnp.zeros((1, resp_width + 1), flatresp.dtype)
+    flatresp = jnp.concatenate([flatresp, guard], axis=0)
+    slot_c = jnp.clip(slot, 0, d * cap)
+    back = flatresp[slot_c]
+    ok = active & (slot < d * cap)
+    out = jnp.where(ok[:, None], back[:, :resp_width], 0)
+    exhausted = jnp.where(ok, back[:, resp_width] > 0, True)
+
+    n_ok = jnp.sum(ok).astype(jnp.int32)
+    stats = FetchStats(
+        requests=n_ok,
+        request_bytes=n_ok * 8,  # 2 int32 words per index (paper: one long)
+        response_bytes=n_ok * per_resp_bytes,
+        padded_request_bytes=d * cap * 8,
+        padded_response_bytes=d * cap * per_resp_bytes,
+        dropped=dropped,
+    )
+    return out, exhausted, ok, stats
+
+
+def _text_window(flat: jnp.ndarray, local_pos: jnp.ndarray, off: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Text-mode window gather from a flat local token shard (0-padded)."""
+    n = flat.shape[0]
+    padded = jnp.pad(flat, (0, k))
+    pos = jnp.where(local_pos >= 0, local_pos + off, n)
+    pos = jnp.clip(pos, 0, n)
+    cols = pos[:, None] + jnp.arange(k)[None, :]
+    cols = jnp.clip(cols, 0, n + k - 1)
+    return padded[cols]
+
+
+def mget_scalar(
+    local_vals: jnp.ndarray,
+    pos: jnp.ndarray,
+    active: jnp.ndarray,
+    spec: StoreSpec,
+    fill: int = 0,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fetch one int32 per global position (the *rank store* used by the
+    beyond-paper prefix-doubling variant — same store abstraction, values are
+    Manber–Myers ranks instead of tokens).  Returns (values, dropped)."""
+    d, cap = spec.num_shards, spec.request_capacity
+    owner = jnp.where(
+        active & (pos >= 0) & (pos < d * spec.rows_per_shard),
+        (pos // spec.rows_per_shard).astype(jnp.int32),
+        jnp.int32(d),
+    )
+    reqs = jnp.stack([pos, jnp.zeros_like(pos)], axis=1)
+    buf, slot, _ = bucket_scatter(reqs, owner, d + 1, cap, fill=-1)
+    dropped = jnp.sum(active & (slot >= d * cap)).astype(jnp.int32)
+    recv = exchange(buf[:d], spec.axis)
+    req_pos = recv[..., 0].reshape(-1)
+    base = lax.axis_index(spec.axis) * spec.rows_per_shard
+    lp = req_pos - base
+    ok = (req_pos >= 0) & (lp >= 0) & (lp < spec.rows_per_shard)
+    vals = jnp.where(ok, local_vals[jnp.clip(lp, 0, spec.rows_per_shard - 1)], fill)
+    resp = exchange(vals.reshape(d, cap, 1), spec.axis).reshape(-1)
+    resp = jnp.concatenate([resp, jnp.array([fill], resp.dtype)])
+    back = resp[jnp.clip(slot, 0, d * cap)]
+    ok2 = active & (slot < d * cap)
+    return jnp.where(ok2, back, fill), dropped
+
+
+def scatter_update(
+    local_vals: jnp.ndarray,
+    pos: jnp.ndarray,
+    values: jnp.ndarray,
+    active: jnp.ndarray,
+    spec: StoreSpec,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter (pos -> value) into the sharded store (rank write-back).
+
+    Returns (new_local_vals, dropped)."""
+    d, cap = spec.num_shards, spec.request_capacity
+    owner = jnp.where(
+        active & (pos >= 0) & (pos < d * spec.rows_per_shard),
+        (pos // spec.rows_per_shard).astype(jnp.int32),
+        jnp.int32(d),
+    )
+    reqs = jnp.stack([pos, values], axis=1)
+    buf, slot, _ = bucket_scatter(reqs, owner, d + 1, cap, fill=-1)
+    dropped = jnp.sum(active & (slot >= d * cap)).astype(jnp.int32)
+    recv = exchange(buf[:d], spec.axis).reshape(d * cap, 2)
+    base = lax.axis_index(spec.axis) * spec.rows_per_shard
+    lp = recv[:, 0] - base
+    ok = (recv[:, 0] >= 0) & (lp >= 0) & (lp < spec.rows_per_shard)
+    lp_c = jnp.where(ok, lp, spec.rows_per_shard)
+    padded = jnp.concatenate([local_vals, jnp.zeros((1,), local_vals.dtype)])
+    padded = padded.at[lp_c].set(jnp.where(ok, recv[:, 1], padded[lp_c]))
+    return padded[: spec.rows_per_shard], dropped

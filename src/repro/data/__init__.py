@@ -1,0 +1,11 @@
+from repro.data.corpus import synth_dna_reads, synth_token_corpus
+from repro.data.dedup import dedup_corpus, find_duplicate_spans
+from repro.data.loader import DeterministicLoader
+
+__all__ = [
+    "synth_dna_reads",
+    "synth_token_corpus",
+    "dedup_corpus",
+    "find_duplicate_spans",
+    "DeterministicLoader",
+]

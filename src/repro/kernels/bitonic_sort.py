@@ -1,0 +1,100 @@
+"""Pallas kernel: VMEM-resident bitonic sorter for (key_hi, key_lo, value).
+
+The reducer-side "sorting group" sorter: the paper accumulates sorting groups
+up to a threshold (1.6e6 suffixes) so each sort fits comfortably in memory
+(§IV-C).  The TPU analogue is a tile that fits VMEM, sorted in-place with a
+bitonic network — log^2(T) compare-exchange stages of pure element-wise
+min/max/select, no dynamic addressing (each stage uses static reshapes to
+pair partners at distance j), so the whole tile stays VMEM-resident.
+
+Lexicographic order on (key_hi, key_lo); ``value`` rides along (carries the
+packed suffix index).  Ascending, not stable (callers append a unique value
+column to the keys when determinism matters — the pipeline always does).
+
+Grid: one step per tile; tiles are sorted independently (the caller merges
+or, as in the tie-break loop, tiles are pre-partitioned sorting groups).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _vma(x):
+    return getattr(jax.typeof(x), "vma", frozenset()) or frozenset()
+
+
+def _cmp_exchange(kh, kl, v, j, asc):
+    """One compare-exchange stage at partner distance j.
+
+    asc: (T,) bool — ascending flag per element (same for both partners).
+    """
+    t = kh.shape[0]
+
+    def pair(x):
+        return x.reshape(t // (2 * j), 2, j)
+
+    def unpair(x):
+        return x.reshape(t)
+
+    ph, pl_, pv, pa = pair(kh), pair(kl), pair(v), pair(asc)
+    ah, al, av = ph[:, 0], pl_[:, 0], pv[:, 0]
+    bh, bl, bv = ph[:, 1], pl_[:, 1], pv[:, 1]
+    a_gt_b = (ah > bh) | ((ah == bh) & (al > bl))
+    swap = jnp.where(pa[:, 0], a_gt_b, ~a_gt_b)
+    nah = jnp.where(swap, bh, ah)
+    nbh = jnp.where(swap, ah, bh)
+    nal = jnp.where(swap, bl, al)
+    nbl = jnp.where(swap, al, bl)
+    nav = jnp.where(swap, bv, av)
+    nbv = jnp.where(swap, av, bv)
+    kh = unpair(jnp.stack([nah, nbh], axis=1))
+    kl = unpair(jnp.stack([nal, nbl], axis=1))
+    v = unpair(jnp.stack([nav, nbv], axis=1))
+    return kh, kl, v
+
+
+def _kernel(kh_ref, kl_ref, v_ref, okh_ref, okl_ref, ov_ref, *, t):
+    kh, kl, v = kh_ref[...], kl_ref[...], v_ref[...]
+    idx = jax.lax.iota(jnp.int32, t)
+    k = 2
+    while k <= t:
+        asc = (idx & k) == 0
+        j = k // 2
+        while j >= 1:
+            kh, kl, v = _cmp_exchange(kh, kl, v, j, asc)
+            j //= 2
+        k *= 2
+    okh_ref[...], okl_ref[...], ov_ref[...] = kh, kl, v
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def bitonic_sort_tiles(key_hi, key_lo, val, tile: int = 1024,
+                       interpret: bool = True):
+    """Sort each ``tile``-sized chunk of (key_hi, key_lo, val) independently.
+
+    Inputs are padded to a multiple of ``tile`` with max-int keys (which sort
+    to the end of their tile).  tile must be a power of two.
+    """
+    assert tile & (tile - 1) == 0, "tile must be a power of two"
+    n = key_hi.shape[0]
+    ntiles = max(1, -(-n // tile))
+    pad = ntiles * tile - n
+    big = jnp.iinfo(jnp.int32).max
+    kh = jnp.pad(key_hi, (0, pad), constant_values=big)
+    kl = jnp.pad(key_lo, (0, pad), constant_values=big)
+    v = jnp.pad(val, (0, pad), constant_values=big)
+    outs = pl.pallas_call(
+        functools.partial(_kernel, t=tile),
+        grid=(ntiles,),
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))] * 3,
+        out_specs=[pl.BlockSpec((tile,), lambda i: (i,))] * 3,
+        out_shape=[jax.ShapeDtypeStruct(
+            (ntiles * tile,), jnp.int32, vma=_vma(key_hi)
+        )] * 3,
+        interpret=interpret,
+    )(kh, kl, v)
+    return tuple(o[:n] for o in outs)

@@ -1,0 +1,72 @@
+"""Pallas kernel: TeraSort range partitioner (paper §IV-A).
+
+bucket(key) = #splitters lexicographically-less-than key — equal keys always
+land in the same bucket (the MapReduce same-key-same-reducer invariant that
+keeps one sorting group on one reducer).  Also emits per-block histograms so
+the shuffle capacities can be planned.
+
+Grid: one step per block of B keys.  Splitters stay resident in VMEM
+(<= 511 x 2 int32 — a few KB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _vma(x):
+    return getattr(jax.typeof(x), "vma", frozenset()) or frozenset()
+
+
+def _kernel(kh_ref, kl_ref, sh_ref, sl_ref, bucket_ref, hist_ref, *, d):
+    kh = kh_ref[...]  # (B,)
+    kl = kl_ref[...]
+    sh = sh_ref[...]  # (D-1,)
+    sl = sl_ref[...]
+    gt = (kh[:, None] > sh[None, :]) | (
+        (kh[:, None] == sh[None, :]) & (kl[:, None] > sl[None, :])
+    )
+    bucket = jnp.sum(gt.astype(jnp.int32), axis=1)
+    bucket_ref[...] = bucket
+    onehot = (bucket[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, d), 1))
+    hist_ref[0, :] = jnp.sum(onehot.astype(jnp.int32), axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def bucket_hist(key_hi: jnp.ndarray, key_lo: jnp.ndarray,
+                split_hi: jnp.ndarray, split_lo: jnp.ndarray,
+                block: int = 1024, interpret: bool = True):
+    """keys (N,), splitters (D-1,) -> (bucket (N,), hist (D,))."""
+    n = key_hi.shape[0]
+    d = split_hi.shape[0] + 1
+    nblocks = -(-n // block)
+    pad = nblocks * block - n
+    # padded keys get the maximum key: counted into the last bucket, which the
+    # caller subtracts (returned hist is corrected here).
+    kh = jnp.pad(key_hi, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
+    kl = jnp.pad(key_lo, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
+    bucket, hist = pl.pallas_call(
+        functools.partial(_kernel, d=d),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((d - 1,), lambda i: (0,)),
+            pl.BlockSpec((d - 1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblocks * block,), jnp.int32, vma=_vma(key_hi)),
+            jax.ShapeDtypeStruct((nblocks, d), jnp.int32, vma=_vma(key_hi)),
+        ],
+        interpret=interpret,
+    )(kh, kl, split_hi, split_lo)
+    hist = jnp.sum(hist, axis=0)
+    hist = hist.at[d - 1].add(-pad)  # remove padding keys
+    return bucket[:n], hist

@@ -1,0 +1,36 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU the kernels run compiled (interpret=False); everywhere else they run
+in interpret mode, which executes the same kernel bodies in Python/XLA for
+bit-exact validation against ``ref.py``.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.bitonic_sort import bitonic_sort_tiles as _bitonic
+from repro.kernels.bucket_hist import bucket_hist as _bucket_hist
+from repro.kernels.prefix_pack import prefix_pack as _prefix_pack
+from repro.kernels.window_gather import window_gather as _window_gather
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def prefix_pack(tokens, cfg, block: int = 512):
+    return _prefix_pack(tokens, cfg, block=block, interpret=_interpret())
+
+
+def window_gather(corpus, rows, offs, k: int):
+    return _window_gather(corpus, rows, offs, k, interpret=_interpret())
+
+
+def bucket_hist(key_hi, key_lo, split_hi, split_lo, block: int = 1024):
+    return _bucket_hist(
+        key_hi, key_lo, split_hi, split_lo, block=block, interpret=_interpret()
+    )
+
+
+def bitonic_sort_tiles(key_hi, key_lo, val, tile: int = 1024):
+    return _bitonic(key_hi, key_lo, val, tile=tile, interpret=_interpret())

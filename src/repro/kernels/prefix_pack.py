@@ -1,0 +1,80 @@
+"""Pallas kernel: Map-phase numeric prefix encoding (paper §IV-B).
+
+Packs, for every suffix position, the next K tokens into ``n_words`` int31
+key words (base-(V+1) multiply packing or bit-shift packing — both
+order-preserving).  This is the hot loop of the paper's Map stage.
+
+TPU-native formulation: instead of a gather of (B, K) windows, the kernel
+reads two adjacent VMEM blocks (current + next, since K <= block) and builds
+the keys from **K statically-shifted slices** with multiply-accumulate — pure
+VPU element-wise work, no dynamic addressing, MXU not needed.
+
+Grid: one step per block of B suffix positions.
+BlockSpecs: tokens block i and block i+1 (the halo) in VMEM; out (B, n_words).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.config import SAConfig
+
+
+def _vma(x):
+    """Propagate varying-manual-axes so the kernel works under shard_map."""
+    return getattr(jax.typeof(x), "vma", frozenset()) or frozenset()
+
+
+def _kernel(cur_ref, nxt_ref, out_ref, *, k, cpw, n_words, base, bits, packing):
+    b = cur_ref.shape[0]
+    full = jnp.concatenate([cur_ref[...], nxt_ref[...]])  # (2B,)
+    for w in range(n_words):
+        acc = jnp.zeros((b,), jnp.int32)
+        for j in range(w * cpw, (w + 1) * cpw):
+            tok = jax.lax.dynamic_slice(full, (j,), (b,))  # static j: shift
+            if packing == "base":
+                acc = acc * base + tok
+            else:
+                acc = (acc << bits) | tok
+        if packing == "bits":
+            acc = acc << (31 - bits * cpw)
+        out_ref[:, w] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "block", "interpret"))
+def prefix_pack(tokens: jnp.ndarray, cfg: SAConfig, block: int = 512,
+                interpret: bool = True) -> jnp.ndarray:
+    """tokens (N,) int32 -> keys (N, key_words) int32.
+
+    Window for position i is tokens[i:i+K] zero-padded past the end; callers
+    wanting halo semantics append the halo to ``tokens`` and slice the result.
+    """
+    n = tokens.shape[0]
+    k = cfg.prefix_len
+    cpw = cfg.resolved_chars_per_word()
+    bits = max(1, int(cfg.vocab_size).bit_length())
+    assert block >= k, (block, k)
+    nblocks = -(-n // block)
+    # pad so block i+1 always exists and windows past N read zeros
+    padded = jnp.pad(tokens, (0, (nblocks + 1) * block - n))
+    kern = functools.partial(
+        _kernel, k=k, cpw=cpw, n_words=cfg.key_words,
+        base=cfg.vocab_size + 1, bits=bits, packing=cfg.packing,
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i + 1,)),
+        ],
+        out_specs=pl.BlockSpec((block, cfg.key_words), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (nblocks * block, cfg.key_words), jnp.int32, vma=_vma(tokens)
+        ),
+        interpret=interpret,
+    )(padded, padded)
+    return out[:n]

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (the ref the tests compare to)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import SAConfig
+from repro.core import encoding
+
+
+def prefix_pack_ref(tokens: jnp.ndarray, cfg: SAConfig) -> jnp.ndarray:
+    """tokens (N,) -> keys (N, key_words); window i = tokens[i:i+K] 0-padded."""
+    n = tokens.shape[0]
+    k = cfg.prefix_len
+    padded = jnp.pad(tokens, (0, k))
+    cols = jnp.arange(n)[:, None] + jnp.arange(k)[None, :]
+    return encoding.pack_words(padded[cols], cfg)
+
+
+def window_gather_ref(corpus, rows, offs, k):
+    return encoding.window_at(corpus, rows, offs, k)
+
+
+def bucket_hist_ref(key_hi, key_lo, split_hi, split_lo):
+    gt = (key_hi[:, None] > split_hi[None, :]) | (
+        (key_hi[:, None] == split_hi[None, :]) & (key_lo[:, None] > split_lo[None, :])
+    )
+    bucket = jnp.sum(gt.astype(jnp.int32), axis=1)
+    hist = jnp.bincount(bucket, length=split_hi.shape[0] + 1)
+    return bucket, hist
+
+
+def bitonic_sort_tiles_ref(key_hi, key_lo, val, tile: int):
+    import jax
+
+    n = key_hi.shape[0]
+    ntiles = max(1, -(-n // tile))
+    pad = ntiles * tile - n
+    big = jnp.iinfo(jnp.int32).max
+    kh = jnp.pad(key_hi, (0, pad), constant_values=big).reshape(ntiles, tile)
+    kl = jnp.pad(key_lo, (0, pad), constant_values=big).reshape(ntiles, tile)
+    v = jnp.pad(val, (0, pad), constant_values=big).reshape(ntiles, tile)
+    skh, skl, sv = jax.lax.sort((kh, kl, v), dimension=1, num_keys=2)
+    return tuple(x.reshape(-1)[:n] for x in (skh, skl, sv))

@@ -1,0 +1,66 @@
+"""Pallas kernel: server side of ``mgetsuffix`` (paper §IV-B, refs [18,19]).
+
+Given the resident corpus shard (rows of tokens) and an aggregated batch of
+(row, offset) requests, gather the K-token suffix windows.  This is what the
+paper's custom Redis command does on the store side; on TPU the batched
+random access becomes a **scalar-prefetch** kernel: the request arrays are
+prefetched into SMEM, the BlockSpec index_map picks the corpus row per grid
+step (one DMA per request), and the in-row offset slice happens in VMEM.
+
+Grid: one step per request.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _vma(*xs):
+    out = frozenset()
+    for x in xs:
+        out = out | (getattr(jax.typeof(x), "vma", frozenset()) or frozenset())
+    return out
+
+
+def _kernel(rows_ref, offs_ref, corpus_ref, out_ref, *, k):
+    g = pl.program_id(0)
+    off = offs_ref[g]
+    row = corpus_ref[0, :]  # the row selected by index_map, (L + k,)
+    out_ref[0, :] = jax.lax.dynamic_slice(row, (off,), (k,))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def window_gather(corpus: jnp.ndarray, rows: jnp.ndarray, offs: jnp.ndarray,
+                  k: int, interpret: bool = True) -> jnp.ndarray:
+    """corpus (R, L) int32, rows/offs (M,) -> windows (M, k) int32.
+
+    Out-of-range rows (< 0 or >= R) return zeros; offsets are clamped to
+    [0, L] and windows past the row end are zero-padded — matching
+    ``repro.core.encoding.window_at`` exactly.
+    """
+    r, l = corpus.shape
+    m = rows.shape[0]
+    # guard row R = zeros; pad columns so off+k never overruns
+    padded = jnp.pad(corpus, ((0, 1), (0, k)))
+    rows_c = jnp.where((rows >= 0) & (rows < r), rows, r).astype(jnp.int32)
+    offs_c = jnp.clip(offs, 0, l).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((1, l + k), lambda g, rows_p, offs_p: (rows_p[g], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, k), lambda g, rows_p, offs_p: (g, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.int32, vma=_vma(corpus, rows, offs)),
+        interpret=interpret,
+    )(rows_c, offs_c, padded)
+    return out

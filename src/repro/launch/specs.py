@@ -1,0 +1,61 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, no device allocation — the dry-run lowers
+against these.  Modality frontends ([audio]/[vlm]) are stubs: their specs are
+precomputed frame/patch embeddings (B, S, d_model) per the assignment.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig, ShapeConfig
+from repro.models.model import Model
+from repro.train.optimizer import adamw_abstract
+from repro.train.step import TrainState
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Model inputs for one (arch x shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.input_mode == "embeddings":
+            return {
+                "embeds": sds((b, s, cfg.d_model), jnp.dtype(cfg.compute_dtype)),
+                "labels": sds((b, s), jnp.int32),
+            }
+        return {
+            "tokens": sds((b, s), jnp.int32),
+            "labels": sds((b, s), jnp.int32),
+        }
+    if shape.kind == "prefill":
+        if cfg.input_mode == "embeddings":
+            return {"embeds": sds((b, s, cfg.d_model), jnp.dtype(cfg.compute_dtype))}
+        return {"tokens": sds((b, s), jnp.int32)}
+    # decode: one new token + positions; the KV cache spec comes from
+    # Model.abstract_cache (seq_len-deep).
+    return {
+        "tokens": sds((b, 1), jnp.int32),
+        "pos": sds((b,), jnp.int32),
+    }
+
+
+def train_state_specs(model: Model) -> TrainState:
+    params = model.abstract()
+    return TrainState(params=params, opt=adamw_abstract(params))
+
+
+def long_context_supported(cfg: ArchConfig) -> bool:
+    """long_500k needs sub-quadratic attention (DESIGN.md §5)."""
+    if cfg.family in ("ssm", "hybrid"):
+        return True
+    a = cfg.attention
+    if a is not None and a.sliding_window is not None:
+        return True  # SWA / 5:1 local:global
+    return False

@@ -1,0 +1,92 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tiny-minicpm \
+        --steps 50 --batch 8 --seq 64
+    PYTHONPATH=src python -m repro.launch.train --arch mixtral-8x7b \
+        --shape train_4k --dry-run       # lower+compile only
+
+On a real TPU slice the same entry point runs under multi-host jax.distribute
+initialization; on CPU it uses the local device mesh.  ``--dry-run`` lowers
+the full-size step against ShapeDtypeStructs (no allocation).
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--schedule", default="cosine", choices=["cosine", "wsd", "constant"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--corpus-tokens", type=int, default=200_000)
+    ap.add_argument("--dedup", action="store_true",
+                    help="run the SA dedup pipeline on the corpus first")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        # the dry-run path forces the 512-device env before jax init
+        from repro.launch import dryrun
+
+        r = dryrun.run_cell(args.arch, args.shape, multi_pod=False)
+        print({k: r.get(k) for k in ("arch", "shape", "status", "bottleneck",
+                                     "roofline_fraction")})
+        return
+
+    import jax
+    import numpy as np
+
+    from repro.config import SAConfig, ShardingPolicy, TrainConfig, get_arch
+    from repro.data.corpus import synth_token_corpus
+    from repro.data.dedup import dedup_corpus
+    from repro.data.loader import DeterministicLoader
+    from repro.models.model import Model
+    from repro.train.loop import run_training
+    from repro.train.step import make_train_step
+
+    cfg = get_arch(args.arch)
+    model = Model(cfg)
+    print(f"arch={cfg.name} params={model.num_params() / 1e6:.1f}M "
+          f"devices={len(jax.devices())}")
+
+    vocab = min(cfg.vocab_size - 1, 255)
+    tokens, _ = synth_token_corpus(args.corpus_tokens, vocab, seed=0,
+                                   dup_fraction=0.02, dup_span=64)
+    mask = None
+    if args.dedup:
+        tokens, keep, stats = dedup_corpus(
+            tokens, min_len=48, cfg=SAConfig(vocab_size=vocab, packing="bits"),
+            mode="doubling",
+        )
+        mask = keep.astype(np.float32)
+        print(f"dedup: masked {stats['masked_tokens']} tokens")
+    loader = DeterministicLoader(tokens, batch=args.batch, seq_len=args.seq,
+                                 seed=1, mask=mask)
+
+    n = len(jax.devices())
+    mesh = jax.make_mesh((n, 1), ("data", "model"))
+    tcfg = TrainConfig(learning_rate=args.lr, schedule=args.schedule,
+                       warmup_steps=max(args.steps // 10, 1),
+                       decay_steps=args.steps, microbatches=args.microbatches)
+    step, state_sh, _ = make_train_step(
+        model, mesh, ShardingPolicy(), tcfg, args.batch, args.seq,
+        donate=False, with_mask=mask is not None,
+    )
+    res = run_training(model, step, loader, tcfg, steps=args.steps,
+                       ckpt_dir=args.ckpt, resume=args.resume,
+                       state_shardings=state_sh)
+    print(f"loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f} "
+          f"({res.final_step} steps, {res.retries} retries)")
+    print(f"monitor: {res.monitor}")
+
+
+if __name__ == "__main__":
+    main()

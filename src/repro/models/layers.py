@@ -1,0 +1,328 @@
+"""Transformer layer computations: RMSNorm, RoPE, GQA/MQA attention with
+sliding windows, (Sw)iGLU MLP, and sort-based dropless MoE.
+
+All functions are pure: ``fn(params_subtree, inputs, cfg, ...)``.  Parameter
+*definitions* (shapes + logical sharding axes) live next to the compute in
+``*_defs`` functions so the model assembles both consistently.
+
+The MoE dispatch deliberately follows the paper's discipline (DESIGN.md §3):
+route **indexes** (capacity-padded scatter/gather — the same primitive as the
+SA shuffle's bucket_scatter), never materialize one-hot dispatch tensors.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ArchConfig, AttentionConfig, MoEConfig
+from repro.models.params import ParamDef
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_defs(d: int) -> Dict[str, ParamDef]:
+    return {"scale": ParamDef((d,), (None,), init="ones")}
+
+
+def rmsnorm(p, x, eps: float):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + 0.0 + p["scale"].astype(jnp.float32))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def attention_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    a = cfg.attention
+    d = cfg.d_model
+    q, kv = a.num_heads * a.head_dim, a.num_kv_heads * a.head_dim
+    defs = {
+        "wq": ParamDef((d, q), ("embed", "q_proj"), init="scaled"),
+        "wk": ParamDef((d, kv), ("embed", "kv_proj"), init="scaled"),
+        "wv": ParamDef((d, kv), ("embed", "kv_proj"), init="scaled"),
+        "wo": ParamDef((q, d), ("q_proj", "embed"), init="scaled"),
+    }
+    if a.qk_norm:
+        defs["q_norm"] = ParamDef((a.head_dim,), (None,), init="ones")
+        defs["k_norm"] = ParamDef((a.head_dim,), (None,), init="ones")
+    return defs
+
+
+def _qkv(p, x, a: AttentionConfig, positions, eps: float):
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"]).reshape(b, s, a.num_heads, a.head_dim)
+    k = jnp.einsum("bsd,dq->bsq", x, p["wk"]).reshape(b, s, a.num_kv_heads, a.head_dim)
+    v = jnp.einsum("bsd,dq->bsq", x, p["wv"]).reshape(b, s, a.num_kv_heads, a.head_dim)
+    if "q_norm" in p:
+        q = _headnorm(q, p["q_norm"], eps)
+        k = _headnorm(k, p["k_norm"], eps)
+    q = rope(q, positions, a.rope_theta)
+    k = rope(k, positions, a.rope_theta)
+    return q, k, v
+
+
+def _headnorm(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))).astype(
+        x.dtype
+    )
+
+
+def _sdpa(q, k, v, mask, a: AttentionConfig):
+    """q: (B,S,H,hd)  k,v: (B,T,KV,hd)  mask: (B|1, S, T) bool."""
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    kvh = k.shape[2]
+    group = h // kvh
+    qg = q.reshape(b, s, kvh, group, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / np.sqrt(hd)
+    if a.logit_softcap > 0:
+        scores = jnp.tanh(scores / a.logit_softcap) * a.logit_softcap
+    neg = jnp.finfo(jnp.float32).min
+    scores = jnp.where(mask[:, None, None, :, :], scores, neg)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v)
+    return out.reshape(b, s, h, hd)
+
+
+def attention_train(p, x, a: AttentionConfig, window: jnp.ndarray, eps: float,
+                    chunk: int = 0):
+    """Full-sequence causal attention with per-layer sliding window.
+
+    window: scalar int32 (traced; == S for global layers) — allows one
+    homogeneous scan over layers with heterogeneous local/global patterns.
+    chunk > 0 switches to the flash-style online-softmax path (no S x S
+    score materialization — the §Perf memory-term optimization).
+    """
+    b, s, d = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    q, k, v = _qkv(p, x, a, positions, eps)
+    if chunk and s > chunk:
+        out = _flash_sdpa(q, k, v, window, a, chunk)
+    else:
+        i = jnp.arange(s)[:, None]
+        j = jnp.arange(s)[None, :]
+        mask = (j <= i) & (j > i - window)
+        out = _sdpa(q, k, v, mask[None], a)
+    return jnp.einsum("bsq,qd->bsd", out.reshape(b, s, -1), p["wo"])
+
+
+def _flash_sdpa(q, k, v, window, a: AttentionConfig, chunk: int):
+    """Online-softmax attention over KV blocks (exact; causal + window).
+
+    Never materializes (S, S) scores: peak intermediate is
+    (B, KV, G, C, C) per block pair — the TPU-native formulation of flash
+    attention in pure jax (the Pallas version would tile identically).
+    """
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    nq = s // chunk
+    assert s % chunk == 0, (s, chunk)
+    qg = q.reshape(b, nq, chunk, kvh, g, hd).transpose(1, 0, 3, 4, 2, 5)
+    kb = k.reshape(b, nq, chunk, kvh, hd).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(b, nq, chunk, kvh, hd).transpose(1, 0, 3, 2, 4)
+    scale = 1.0 / np.sqrt(hd)
+    neg = jnp.finfo(jnp.float32).min
+
+    def q_block(qi, i):
+        # qi: (B, KV, G, C, hd); scan over kv blocks j with running softmax
+        m0 = jnp.full((b, kvh, g, chunk), neg, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, chunk), jnp.float32)
+        acc0 = jnp.zeros((b, kvh, g, chunk, hd), jnp.float32)
+        rows = i * chunk + jnp.arange(chunk)
+
+        def kv_block(carry, inp):
+            m, l, acc = carry
+            kj, vj, j = inp
+            cols = j * chunk + jnp.arange(chunk)
+            sc = jnp.einsum("bkgch,bkth->bkgct", qi, kj).astype(jnp.float32)
+            sc = sc * scale
+            if a.logit_softcap > 0:
+                sc = jnp.tanh(sc / a.logit_softcap) * a.logit_softcap
+            mask = (cols[None, :] <= rows[:, None]) & (
+                cols[None, :] > rows[:, None] - window
+            )
+            sc = jnp.where(mask[None, None, None], sc, neg)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgct,bkth->bkgch", p, vj.astype(jnp.float32)
+            )
+            l = l * corr + jnp.sum(p, axis=-1)
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, acc0), (kb, vb, jnp.arange(nq))
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.astype(q.dtype)  # (B, KV, G, C, hd)
+
+    outs = jax.lax.map(lambda args: q_block(*args), (qg, jnp.arange(nq)))
+    # (nq, B, KV, G, C, hd) -> (B, S, H, hd)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, s, h, hd)
+    return out
+
+
+def attention_decode(p, x, a: AttentionConfig, cache_k, cache_v, pos,
+                     window: jnp.ndarray, eps: float):
+    """One-token decode against a KV cache.
+
+    x: (B, 1, d);  cache_k/v: (B, T, KV, hd);  pos: (B,) current positions.
+    Returns (out, new_k_entry, new_v_entry) — the caller owns the cache
+    update so layouts (full vs ring) stay a policy decision.
+    """
+    b, _, d = x.shape
+    t = cache_k.shape[1]
+    q, k_new, v_new = _qkv(p, x, a, pos[:, None], eps)
+    j = jnp.arange(t)[None, :]
+    mask = (j <= pos[:, None]) & (j > pos[:, None] - window)  # (B, T)
+    out = _sdpa(q, cache_k, cache_v, mask[:, None, :], a)
+    out = jnp.einsum("bsq,qd->bsd", out.reshape(b, 1, -1), p["wo"])
+    return out, k_new, v_new
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, cfg.d_ff
+    defs = {
+        "w_up": ParamDef((d, f), ("embed", "mlp"), init="scaled"),
+        "w_down": ParamDef((f, d), ("mlp", "embed"), init="scaled"),
+    }
+    if cfg.act == "silu":
+        defs["w_gate"] = ParamDef((d, f), ("embed", "mlp"), init="scaled")
+    return defs
+
+
+def mlp(p, x, act: str):
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    if act == "silu":
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# MoE: sort-based dropless-ish dispatch (capacity-padded, index-routed)
+# ---------------------------------------------------------------------------
+
+
+def moe_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.expert_ffn_dim, m.num_experts
+    return {
+        "router": ParamDef((d, e), ("embed", "experts"), init="scaled"),
+        "w_gate": ParamDef((e, d, f), ("experts", "embed", "expert_mlp"), init="scaled"),
+        "w_up": ParamDef((e, d, f), ("experts", "embed", "expert_mlp"), init="scaled"),
+        "w_down": ParamDef((e, f, d), ("experts", "expert_mlp", "embed"), init="scaled"),
+    }
+
+
+def moe(p, x, m: MoEConfig):
+    """x: (B, S, d) -> (B, S, d).
+
+    Index-routed dispatch (the paper's communicate-indexes discipline):
+      1. top-k routing -> (T*k) (expert, token) pairs
+      2. capacity-padded slot assignment per expert (argsort + prefix-count —
+         bucket_scatter's pattern)
+      3. gather tokens into (E, C, d), batched expert matmuls, weighted
+         scatter-add back.  Overflow beyond capacity is dropped (standard
+         capacity-factor semantics; capacity = ceil(T*k/E * cf)).
+    """
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xt, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, m.top_k)  # (T, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    n = t * m.top_k
+    cap = int(np.ceil(t * m.top_k / m.num_experts * m.capacity_factor))
+    expert = top_e.reshape(n)
+    tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), m.top_k)
+    gate = top_p.reshape(n).astype(x.dtype)
+
+    order = jnp.argsort(expert, stable=True)
+    e_sorted = expert[order]
+    hist = jnp.bincount(expert, length=m.num_experts)
+    start = jnp.cumsum(hist) - hist
+    slot_in_e = jnp.arange(n, dtype=jnp.int32) - start[e_sorted].astype(jnp.int32)
+    ok = slot_in_e < cap
+    flat_slot = jnp.where(ok, e_sorted * cap + slot_in_e, m.num_experts * cap)
+
+    # gather tokens into expert buffers (guard slot at the end)
+    buf = jnp.zeros((m.num_experts * cap + 1, d), x.dtype)
+    buf = buf.at[flat_slot].set(xt[tok[order]])
+    h = buf[: m.num_experts * cap].reshape(m.num_experts, cap, d)
+
+    gateh = jnp.einsum("ecd,edf->ecf", h, p["w_gate"])
+    up = jnp.einsum("ecd,edf->ecf", h, p["w_up"])
+    out_e = jnp.einsum("ecf,efd->ecd", jax.nn.silu(gateh) * up, p["w_down"])
+
+    flat = jnp.concatenate(
+        [out_e.reshape(m.num_experts * cap, d), jnp.zeros((1, d), x.dtype)]
+    )
+    back = flat[jnp.minimum(flat_slot, m.num_experts * cap)]  # (n, d) in sorted order
+    contrib = back * jnp.where(ok, gate[order], 0.0)[:, None]
+    out = jnp.zeros((t, d), x.dtype).at[tok[order]].add(contrib)
+    return out.reshape(b, s, d)
+
+
+def moe_ref_dense(p, x, m: MoEConfig):
+    """Oracle: dense all-experts compute with top-k mask (tests only)."""
+    b, s, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = jnp.einsum("td,de->te", xt, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, m.top_k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    w = jnp.zeros_like(probs)
+    w = jax.vmap(lambda wr, er, pr: wr.at[er].set(pr))(w, top_e, top_p)
+    gate = jnp.einsum("td,edf->tef", xt, p["w_gate"])
+    up = jnp.einsum("td,edf->tef", xt, p["w_up"])
+    h = jax.nn.silu(gate) * up
+    out_e = jnp.einsum("tef,efd->ted", h, p["w_down"])
+    out = jnp.einsum("ted,te->td", out_e, w.astype(x.dtype))
+    return out.reshape(b, s, d)

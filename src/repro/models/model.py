@@ -1,0 +1,108 @@
+"""Model facade: one uniform interface over the architecture families.
+
+    model = Model(get_arch("mixtral-8x7b"))
+    params = model.init(jax.random.key(0))          # or model.abstract()
+    logits = model.forward(params, tokens=batch)
+    loss, aux = model.loss(params, {"tokens": t, "labels": l})
+    logits, cache = model.prefill(params, tokens=t, max_seq=S)
+    logits, cache = model.decode_step(params, cache, tok, pos)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models import transformer, xlstm
+from repro.models.params import (
+    abstract_params,
+    axes_tree,
+    count_params,
+    init_params,
+)
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.is_xlstm = cfg.family == "ssm"
+        if self.is_xlstm:
+            self._defs_full = xlstm.model_defs(cfg)
+            self._defs = xlstm.strip_static(self._defs_full)
+        else:
+            self._defs = transformer.model_defs(cfg)
+
+    # -- parameters ------------------------------------------------------
+    def param_defs(self):
+        return self._defs
+
+    def init(self, key, dtype: Optional[Any] = None):
+        dtype = dtype or jnp.dtype(self.cfg.param_dtype)
+        return init_params(self._defs, key, dtype)
+
+    def abstract(self, dtype: Optional[Any] = None):
+        dtype = dtype or jnp.dtype(self.cfg.param_dtype)
+        return abstract_params(self._defs, dtype)
+
+    def axes(self):
+        return axes_tree(self._defs)
+
+    def num_params(self) -> int:
+        return count_params(self._defs)
+
+    # -- compute ----------------------------------------------------------
+    def forward(self, params, tokens=None, embeds=None):
+        if self.is_xlstm:
+            return xlstm.forward(self.cfg, params, tokens=tokens, embeds=embeds)
+        return transformer.forward(self.cfg, params, tokens=tokens, embeds=embeds)
+
+    def loss(self, params, batch):
+        if self.is_xlstm:
+            logits = xlstm.forward(
+                self.cfg, params, tokens=batch.get("tokens"),
+                embeds=batch.get("embeds"),
+            ).astype(jnp.float32)
+            labels = batch["labels"]
+            logz = jax.scipy.special.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+            import numpy as np
+
+            loss = jnp.sum(logz - gold) / np.prod(labels.shape)
+            return loss, {"loss": loss}
+        return transformer.loss_fn(self.cfg, params, batch)
+
+    # -- serving ----------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int):
+        if self.is_xlstm:
+            return xlstm.init_state(self.cfg, batch)
+        if self.cfg.window_decode_cache:
+            return transformer.init_cache_windowed(self.cfg, batch, max_seq)
+        return transformer.init_cache(self.cfg, batch, max_seq)
+
+    def abstract_cache(self, batch: int, max_seq: int):
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.eval_shape(lambda: self.init_cache(batch, max_seq)),
+        )
+
+    def prefill(self, params, tokens=None, embeds=None, max_seq=None):
+        if self.is_xlstm:
+            logits, state = xlstm.forward(
+                self.cfg, params, tokens=tokens, embeds=embeds, return_state=True
+            )
+            return logits, state
+        return transformer.prefill(
+            self.cfg, params, tokens=tokens, embeds=embeds, max_seq=max_seq
+        )
+
+    def decode_step(self, params, cache, tokens, pos):
+        if self.is_xlstm:
+            return xlstm.decode_step(self.cfg, params, cache, tokens, pos)
+        if self.cfg.window_decode_cache:
+            return transformer.decode_step_windowed(
+                self.cfg, params, cache, tokens, pos
+            )
+        return transformer.decode_step(self.cfg, params, cache, tokens, pos)

@@ -1,0 +1,83 @@
+"""Minimal parameter-definition framework.
+
+Modules declare parameters as pytrees of :class:`ParamDef` (shape + logical
+axes + init).  From one definition tree we derive:
+
+* ``init(key)``        — materialized params (for smoke tests / real training)
+* ``abstract()``       — ShapeDtypeStructs (for the no-allocation dry-run)
+* ``axes()``           — logical-axis tree consumed by ``repro.sharding``
+
+Logical axis vocabulary (mapped to mesh axes by sharding rules):
+  "vocab", "embed", "mlp", "q_heads", "kv_heads", "head", "experts",
+  "expert_mlp", "layers", "ssm_inner", "ssm_state", "conv", null (None)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | scaled
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _materialize(defn: ParamDef, key, dtype) -> jnp.ndarray:
+    if defn.init == "zeros":
+        return jnp.zeros(defn.shape, dtype)
+    if defn.init == "ones":
+        return jnp.ones(defn.shape, dtype)
+    if defn.init == "scaled":
+        fan_in = defn.shape[0] if defn.shape else 1
+        s = 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, defn.shape) * s).astype(dtype)
+    return (jax.random.normal(key, defn.shape) * defn.scale).astype(dtype)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs, key, dtype=jnp.float32):
+    """Materialize a ParamDef tree into real arrays."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    vals = [_materialize(d, k, dtype) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(defs, dtype=jnp.float32):
+    """ShapeDtypeStructs for the dry-run (no device allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs, is_leaf=is_def
+    )
+
+
+def axes_tree(defs):
+    return jax.tree.map(lambda d: d.axes, defs, is_leaf=is_def)
+
+
+def count_params(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    return int(sum(np.prod(d.shape) for d in leaves))
+
+
+def stack_layer_defs(defn, num_layers: int):
+    """Prefix every ParamDef with a leading stacked 'layers' axis."""
+    return jax.tree.map(
+        lambda d: ParamDef((num_layers,) + d.shape, ("layers",) + d.axes,
+                           d.init, d.scale),
+        defn,
+        is_leaf=is_def,
+    )

@@ -1,0 +1,249 @@
+"""Recurrent / state-space blocks: mLSTM + sLSTM (xLSTM, arXiv:2405.04517)
+and a Mamba-style selective SSM head (for Hymba's parallel attn+SSM blocks,
+arXiv:2411.13676).
+
+Decode carries O(1)-in-sequence state — these are the sub-quadratic families
+that make the ``long_500k`` shape runnable (DESIGN.md §5).
+
+Training-time evaluation:
+* mLSTM: chunkwise-parallel recurrence (exact, matches the sequential scan).
+* sLSTM: sequential ``lax.scan`` over time (non-linear recurrence cannot be
+  parallelized exactly); xlstm-125m places few of these.
+* mamba: diagonal linear recurrence evaluated with an associative scan.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models.params import ParamDef
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix memory)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    a = cfg.attention
+    h, hd = a.num_heads, d // a.num_heads
+    return {
+        "wq": ParamDef((d, d), ("embed", "q_proj"), init="scaled"),
+        "wk": ParamDef((d, d), ("embed", "q_proj"), init="scaled"),
+        "wv": ParamDef((d, d), ("embed", "q_proj"), init="scaled"),
+        "wi": ParamDef((d, h), ("embed", None), init="scaled"),
+        "wf": ParamDef((d, h), ("embed", None), init="scaled"),
+        "wo_gate": ParamDef((d, d), ("embed", "q_proj"), init="scaled"),
+        "wo": ParamDef((d, d), ("q_proj", "embed"), init="scaled"),
+    }
+
+
+def _mlstm_step(carry, inp):
+    """carry: (C (B,H,hd,hd), n (B,H,hd), m (B,H)); one timestep."""
+    c, n, m = carry
+    q, k, v, i_t, f_t = inp  # q,k,v: (B,H,hd); i,f: (B,H)
+    logf = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(logf + m, i_t)
+    f_eff = jnp.exp(logf + m - m_new)[..., None]
+    i_eff = jnp.exp(i_t - m_new)[..., None]
+    c = f_eff[..., None] * c + (i_eff * k)[..., None] * v[..., None, :]
+    n = f_eff * n + i_eff * k
+    denom = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)), jnp.exp(-m_new)
+    )[..., None]
+    out = jnp.einsum("bhde,bhd->bhe", c, q) / denom
+    return (c, n, m_new), out
+
+
+def mlstm_scan(p, x, cfg: ArchConfig, state=None):
+    """x: (B, S, d) -> (out (B,S,d), state).  Exact sequential semantics."""
+    b, s, d = x.shape
+    a = cfg.attention
+    h = a.num_heads
+    hd = d // h
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(b, s, h, hd) / (hd**0.5)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(b, s, h, hd) / (hd**0.5)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(b, s, h, hd)
+    i_g = jnp.einsum("bsd,dh->bsh", x, p["wi"]).astype(jnp.float32)
+    f_g = jnp.einsum("bsd,dh->bsh", x, p["wf"]).astype(jnp.float32)
+    if state is None:
+        c0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, h, hd), jnp.float32)
+        m0 = jnp.full((b, h), -1e9, jnp.float32)
+        state = (c0, n0, m0)
+    xs = (
+        q.transpose(1, 0, 2, 3).astype(jnp.float32),
+        k.transpose(1, 0, 2, 3).astype(jnp.float32),
+        v.transpose(1, 0, 2, 3).astype(jnp.float32),
+        i_g.transpose(1, 0, 2),
+        f_g.transpose(1, 0, 2),
+    )
+    state, outs = jax.lax.scan(_mlstm_step, state, xs)
+    out = outs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    gate = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["wo_gate"]))
+    return jnp.einsum("bsd,de->bse", out * gate, p["wo"]), state
+
+
+def mlstm_decode(p, x, cfg: ArchConfig, state):
+    out, state = mlstm_scan(p, x, cfg, state)
+    return out, state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, non-linear recurrence)
+# ---------------------------------------------------------------------------
+
+
+def slstm_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    return {
+        "wz": ParamDef((d, d), ("embed", "q_proj"), init="scaled"),
+        "wi": ParamDef((d, d), ("embed", "q_proj"), init="scaled"),
+        "wf": ParamDef((d, d), ("embed", "q_proj"), init="scaled"),
+        "wo_gate": ParamDef((d, d), ("embed", "q_proj"), init="scaled"),
+        "rz": ParamDef((d, d), ("embed", "q_proj"), init="scaled", scale=0.0),
+        "wo": ParamDef((d, d), ("q_proj", "embed"), init="scaled"),
+    }
+
+
+def _slstm_step(p, carry, inp):
+    c, n, m, hprev = carry  # all (B, d) fp32
+    z_in, i_in, f_in, o_in = inp
+    z = jnp.tanh(z_in + hprev @ p["rz"].astype(jnp.float32))
+    logf = jax.nn.log_sigmoid(f_in)
+    m_new = jnp.maximum(logf + m, i_in)
+    f_eff = jnp.exp(logf + m - m_new)
+    i_eff = jnp.exp(i_in - m_new)
+    c = f_eff * c + i_eff * z
+    n = f_eff * n + i_eff
+    h = jax.nn.sigmoid(o_in) * c / jnp.maximum(n, 1.0)
+    return (c, n, m_new, h), h
+
+
+def slstm_scan(p, x, cfg: ArchConfig, state=None):
+    b, s, d = x.shape
+    z_in = jnp.einsum("bsd,de->bse", x, p["wz"]).astype(jnp.float32)
+    i_in = jnp.einsum("bsd,de->bse", x, p["wi"]).astype(jnp.float32)
+    f_in = jnp.einsum("bsd,de->bse", x, p["wf"]).astype(jnp.float32)
+    o_in = jnp.einsum("bsd,de->bse", x, p["wo_gate"]).astype(jnp.float32)
+    if state is None:
+        zeros = jnp.zeros((b, d), jnp.float32)
+        state = (zeros, zeros, jnp.full((b, d), -1e9, jnp.float32), zeros)
+    xs = tuple(t.transpose(1, 0, 2) for t in (z_in, i_in, f_in, o_in))
+    step = lambda carry, inp: _slstm_step(p, carry, inp)
+    state, outs = jax.lax.scan(step, state, xs)
+    out = outs.transpose(1, 0, 2).astype(x.dtype)
+    return jnp.einsum("bsd,de->bse", out, p["wo"]), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM (diagonal A, associative scan)
+# ---------------------------------------------------------------------------
+
+
+def mamba_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    s = cfg.ssm
+    inner = s.expand * d
+    return {
+        "w_in": ParamDef((d, 2 * inner), ("embed", "ssm_inner"), init="scaled"),
+        "conv": ParamDef((s.conv_width, inner), ("conv", "ssm_inner"), init="scaled"),
+        "w_dt": ParamDef((inner,), ("ssm_inner",), init="ones"),
+        "w_bc": ParamDef((inner, 2 * s.state_dim), ("ssm_inner", None), init="scaled"),
+        "a_log": ParamDef((inner, s.state_dim), ("ssm_inner", "ssm_state"), init="zeros"),
+        "w_out": ParamDef((inner, d), ("ssm_inner", "embed"), init="scaled"),
+    }
+
+
+def _mamba_inner(p, xi, z, cfg: ArchConfig, conv_state, h0):
+    """One chunk of the selective scan.  xi/z: (B, C, inner)."""
+    b, c_len, inner = xi.shape
+    s = cfg.ssm
+    w = s.conv_width
+    xpad = jnp.concatenate([conv_state, xi], axis=1)
+    xc = sum(
+        xpad[:, i : i + c_len, :] * p["conv"][i][None, None, :] for i in range(w)
+    )
+    xc = jax.nn.silu(xc)
+    new_conv_state = (
+        xpad[:, -(w - 1):, :] if w > 1 else jnp.zeros((b, 0, inner), xi.dtype)
+    )
+
+    dt = jax.nn.softplus(xc * p["w_dt"][None, None, :]).astype(jnp.float32)
+    bc = jnp.einsum("bsi,ic->bsc", xc, p["w_bc"]).astype(jnp.float32)
+    b_t, c_t = bc[..., : s.state_dim], bc[..., s.state_dim :]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (inner, N) negative
+    decay = jnp.exp(dt[..., None] * a[None, None])  # (B, C, inner, N)
+    drive = dt[..., None] * b_t[:, :, None, :] * xc.astype(jnp.float32)[..., None]
+    drive = drive.at[:, 0].add(decay[:, 0] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    _, h = jax.lax.associative_scan(
+        combine, (decay.transpose(1, 0, 2, 3), drive.transpose(1, 0, 2, 3)),
+        axis=0,
+    )
+    h = h.transpose(1, 0, 2, 3)  # (B, C, inner, N)
+    y = jnp.einsum("bsin,bsn->bsi", h, c_t).astype(xi.dtype)
+    y = y * jax.nn.silu(z)
+    return y, new_conv_state, h[:, -1]
+
+
+def mamba_scan(p, x, cfg: ArchConfig, state=None):
+    """x: (B, S, d) -> (out, (conv_state, ssm_state)).
+
+    Linear diagonal recurrence evaluated chunkwise (exact): an outer
+    lax.scan carries (conv_state, h) across chunks of ``cfg.ssm.chunk_size``
+    and an associative scan runs within each chunk — peak intermediates are
+    (B, C, inner, N) instead of (B, S, inner, N), the §Perf memory-term fix
+    for the hybrid family.
+    """
+    b, s_len, d = x.shape
+    s = cfg.ssm
+    inner = s.expand * d
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    xi, z = xz[..., :inner], xz[..., inner:]
+
+    if state is not None:
+        conv_state, h0 = state
+    else:
+        conv_state = jnp.zeros((b, s.conv_width - 1, inner), x.dtype)
+        h0 = jnp.zeros((b, inner, s.state_dim), jnp.float32)
+
+    c = min(s.chunk_size or s_len, s_len)
+    if s_len % c != 0:
+        c = s_len  # fall back to one chunk for ragged lengths
+    if c == s_len:
+        y, conv_state, h_last = _mamba_inner(p, xi, z, cfg, conv_state, h0)
+        out = jnp.einsum("bsi,id->bsd", y, p["w_out"])
+        return out, (conv_state, h_last)
+
+    nchunks = s_len // c
+    xi_c = xi.reshape(b, nchunks, c, inner).transpose(1, 0, 2, 3)
+    z_c = z.reshape(b, nchunks, c, inner).transpose(1, 0, 2, 3)
+
+    def step(carry, inp):
+        conv_s, h = carry
+        xc_, zc_ = inp
+        y, conv_s, h = _mamba_inner(p, xc_, zc_, cfg, conv_s, h)
+        return (conv_s, h), y
+
+    (conv_state, h_last), ys = jax.lax.scan(step, (conv_state, h0), (xi_c, z_c))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s_len, inner)
+    out = jnp.einsum("bsi,id->bsd", y, p["w_out"])
+    return out, (conv_state, h_last)
+
+
+def mamba_init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    inner = s.expand * cfg.d_model
+    conv = jnp.zeros((batch, s.conv_width - 1, inner), dtype)
+    h = jnp.zeros((batch, inner, s.state_dim), jnp.float32)
+    return (conv, h)

@@ -1,0 +1,455 @@
+"""Unified decoder-only LM covering the assigned architecture families.
+
+One homogeneous Block (attention [+ parallel Mamba heads] + MLP/MoE) is
+scanned over the layer stack (stacked params -> compact HLO, fast compiles,
+per-layer heterogeneity expressed as *data*: a (L,) window array encodes
+gemma3's 5:1 local:global pattern and Mixtral's SWA).  The xLSTM family has
+structurally different per-layer params (mLSTM vs sLSTM) and modest depth, so
+it unrolls (``repro.models.xlstm``).
+
+Interfaces (all pure functions of (params, inputs)):
+  forward      : full-sequence causal logits       (train_4k)
+  prefill      : forward + populated KV cache      (prefill_32k)
+  decode_step  : one token against the cache       (decode_32k / long_500k)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ArchConfig
+from repro.models import layers, ssm
+from repro.models.params import (
+    ParamDef,
+    abstract_params,
+    axes_tree,
+    count_params,
+    init_params,
+    stack_layer_defs,
+)
+
+
+# ---------------------------------------------------------------------------
+# parameter definitions
+# ---------------------------------------------------------------------------
+
+
+def block_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    defs: Dict[str, Any] = {
+        "ln_attn": layers.rmsnorm_defs(d),
+        "ln_mlp": layers.rmsnorm_defs(d),
+    }
+    if cfg.attention is not None:
+        defs["attn"] = layers.attention_defs(cfg)
+    if cfg.moe is not None:
+        defs["moe"] = layers.moe_defs(cfg)
+    elif cfg.d_ff > 0:
+        defs["mlp"] = layers.mlp_defs(cfg)
+    if cfg.ssm is not None and cfg.family == "hybrid":
+        defs["mamba"] = ssm.mamba_defs(cfg)
+    return defs
+
+
+def model_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    defs = {
+        "embed": ParamDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed")),
+        "blocks": stack_layer_defs(block_defs(cfg), cfg.num_layers),
+        "ln_out": layers.rmsnorm_defs(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        defs["unembed"] = ParamDef(
+            (cfg.d_model, cfg.vocab_size), ("embed", "vocab"), init="scaled"
+        )
+    return defs
+
+
+def window_schedule(cfg: ArchConfig, seq_len: int) -> np.ndarray:
+    """(L,) int32 per-layer attention window (== seq_len for global)."""
+    if cfg.attention is None:
+        return np.full((cfg.num_layers,), seq_len, np.int32)
+    return np.array(
+        [cfg.attention.window_for_layer(i, seq_len) for i in range(cfg.num_layers)],
+        np.int32,
+    )
+
+
+# ---------------------------------------------------------------------------
+# block forward
+# ---------------------------------------------------------------------------
+
+
+def _block_train(cfg: ArchConfig, p, x, window):
+    a_in = layers.rmsnorm(p["ln_attn"], x, cfg.norm_eps)
+    delta = jnp.zeros_like(x)
+    if "attn" in p:
+        delta = layers.attention_train(p["attn"], a_in, cfg.attention, window,
+                                       cfg.norm_eps, chunk=cfg.attn_chunk)
+    if "mamba" in p:  # hymba: parallel attention + SSM heads, fused mean
+        m_out, _ = ssm.mamba_scan(p["mamba"], a_in, cfg)
+        delta = (delta + m_out) * 0.5 if "attn" in p else m_out
+    x = x + delta
+    h_in = layers.rmsnorm(p["ln_mlp"], x, cfg.norm_eps)
+    if "moe" in p:
+        x = x + layers.moe(p["moe"], h_in, cfg.moe)
+    elif "mlp" in p:
+        x = x + layers.mlp(p["mlp"], h_in, cfg.act)
+    return x
+
+
+def _remat(cfg: ArchConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots_saveable":
+        policy = jax.checkpoint_policies.dots_saveable
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+def forward(cfg: ArchConfig, params, tokens=None, embeds=None):
+    """Causal full-sequence forward.  Returns logits (B, S, V)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if embeds is None:
+        x = params["embed"].astype(cdt)[tokens]
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), cdt)
+    else:
+        x = embeds.astype(cdt)
+    s = x.shape[1]
+    windows = jnp.asarray(window_schedule(cfg, s))
+
+    block = _remat(cfg, functools.partial(_block_train, cfg))
+
+    def scan_body(x, layer_in):
+        p, w = layer_in
+        p = jax.tree.map(lambda a: a.astype(cdt), p)
+        return block(p, x, w), None
+
+    x, _ = jax.lax.scan(scan_body, x, (params["blocks"], windows),
+                        unroll=1 if cfg.scan_layers else cfg.num_layers)
+    x = layers.rmsnorm(params["ln_out"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(cdt))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(cdt))
+    return logits
+
+
+def loss_fn(cfg: ArchConfig, params, batch) -> Tuple[jnp.ndarray, Dict]:
+    """Next-token cross entropy.  batch: {tokens|embeds, labels, mask?}."""
+    if cfg.loss_chunk:
+        x = forward_hidden(
+            cfg, params, tokens=batch.get("tokens"), embeds=batch.get("embeds")
+        )
+        return chunked_ce(cfg, params, x, batch["labels"], batch.get("mask"))
+    logits = forward(
+        cfg, params, tokens=batch.get("tokens"), embeds=batch.get("embeds")
+    )
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        denom = np.prod(labels.shape)
+    loss = jnp.sum(nll) / denom
+    return loss, {"loss": loss, "ntokens": denom}
+
+
+def chunked_ce(cfg: ArchConfig, params, x_final, labels, mask=None):
+    """Sequence-chunked cross entropy: the (B, C, V) logits chunk is the
+    largest live value — full (B, S, V) logits never exist (the §Perf
+    memory-term fix for 262k vocabularies)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b, s, d = x_final.shape
+    c = min(cfg.loss_chunk or s, s)
+    assert s % c == 0, (s, c)
+    w = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    eq = "bcd,vd->bcv" if cfg.tie_embeddings else "bcd,dv->bcv"
+
+    def one(carry, inp):
+        xc, lc, mc = inp
+        logits = jnp.einsum(eq, xc, w.astype(cdt)).astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mc
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(mc)), None
+
+    xs = x_final.reshape(b, s // c, c, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, s // c, c).transpose(1, 0, 2)
+    ms = (
+        mask.reshape(b, s // c, c).transpose(1, 0, 2).astype(jnp.float32)
+        if mask is not None
+        else jnp.ones((s // c, b, c), jnp.float32)
+    )
+    one = jax.checkpoint(one)
+    (tot, cnt), _ = jax.lax.scan(one, (jnp.float32(0.0), jnp.float32(0.0)),
+                                 (xs, ls, ms))
+    loss = tot / jnp.maximum(cnt, 1.0)
+    return loss, {"loss": loss, "ntokens": cnt}
+
+
+def forward_hidden(cfg: ArchConfig, params, tokens=None, embeds=None):
+    """Forward up to the final norm (no logits) — used by chunked CE."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if embeds is None:
+        x = params["embed"].astype(cdt)[tokens]
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), cdt)
+    else:
+        x = embeds.astype(cdt)
+    s = x.shape[1]
+    windows = jnp.asarray(window_schedule(cfg, s))
+    block = _remat(cfg, functools.partial(_block_train, cfg))
+
+    def scan_body(x, layer_in):
+        p, w = layer_in
+        p = jax.tree.map(lambda a: a.astype(cdt), p)
+        return block(p, x, w), None
+
+    x, _ = jax.lax.scan(scan_body, x, (params["blocks"], windows),
+                        unroll=1 if cfg.scan_layers else cfg.num_layers)
+    return layers.rmsnorm(params["ln_out"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=None):
+    """Stacked per-layer cache pytree (all zeros)."""
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    cache: Dict[str, Any] = {}
+    if cfg.attention is not None:
+        a = cfg.attention
+        shape = (cfg.num_layers, batch, max_seq, a.num_kv_heads, a.head_dim)
+        cache["k"] = jnp.zeros(shape, dtype)
+        cache["v"] = jnp.zeros(shape, dtype)
+    if cfg.ssm is not None and cfg.family == "hybrid":
+        s = cfg.ssm
+        inner = s.expand * cfg.d_model
+        cache["conv"] = jnp.zeros(
+            (cfg.num_layers, batch, s.conv_width - 1, inner), dtype
+        )
+        cache["ssm"] = jnp.zeros(
+            (cfg.num_layers, batch, inner, s.state_dim), jnp.float32
+        )
+    return cache
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+        jax.eval_shape(lambda: init_cache(cfg, batch, max_seq, dtype)),
+    )
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, pos):
+    """One decode step.
+
+    tokens: (B, 1) int32; pos: (B,) positions being written.
+    Returns (logits (B, 1, V), new_cache).
+    """
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b = tokens.shape[0]
+    x = params["embed"].astype(cdt)[tokens[:, 0]][:, None, :]
+    x = x * jnp.asarray(np.sqrt(cfg.d_model), cdt)
+    max_seq = cache["k"].shape[2] if "k" in cache else 0
+    windows = jnp.asarray(window_schedule(cfg, max_seq or 1))
+
+    def scan_body(x, layer_in):
+        p, w, cl = layer_in
+        p = jax.tree.map(lambda a: a.astype(cdt), p)
+        out_cache = dict(cl)
+        a_in = layers.rmsnorm(p["ln_attn"], x, cfg.norm_eps)
+        delta = jnp.zeros_like(x)
+        if "k" in cl:
+            a = cfg.attention
+            q, k_new, v_new = layers._qkv(p["attn"], a_in, a, pos[:, None],
+                                          cfg.norm_eps)
+            # write the token's K/V first so it attends to itself
+            ck = cl["k"].at[jnp.arange(b), pos].set(k_new[:, 0])
+            cv = cl["v"].at[jnp.arange(b), pos].set(v_new[:, 0])
+            out_cache["k"], out_cache["v"] = ck, cv
+            t = ck.shape[1]
+            j = jnp.arange(t)[None, :]
+            mask = (j <= pos[:, None]) & (j > pos[:, None] - w)  # (B, T)
+            o = layers._sdpa(q, ck, cv, mask[:, None, :], a)
+            delta = jnp.einsum("bsq,qd->bsd", o.reshape(b, 1, -1),
+                               p["attn"]["wo"])
+        if "mamba" in p:
+            m_out, (conv_s, ssm_s) = ssm.mamba_scan(
+                p["mamba"], a_in, cfg, state=(cl["conv"], cl["ssm"])
+            )
+            out_cache["conv"], out_cache["ssm"] = conv_s, ssm_s
+            delta = (delta + m_out) * 0.5 if "attn" in p else m_out
+        x = x + delta
+        h_in = layers.rmsnorm(p["ln_mlp"], x, cfg.norm_eps)
+        if "moe" in p:
+            x = x + layers.moe(p["moe"], h_in, cfg.moe)
+        elif "mlp" in p:
+            x = x + layers.mlp(p["mlp"], h_in, cfg.act)
+        return x, out_cache
+
+    x, new_cache = jax.lax.scan(
+        scan_body, x, (params["blocks"], windows, cache),
+        unroll=1 if cfg.scan_layers else cfg.num_layers,
+    )
+    x = layers.rmsnorm(params["ln_out"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(cdt))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(cdt))
+    return logits, new_cache
+
+
+def init_cache_windowed(cfg: ArchConfig, batch: int, max_seq: int, dtype=None):
+    """Per-layer caches sized to each layer's attention window (ring buffers
+    for local layers) — the §Perf memory-term fix for local:global decode.
+
+    Returns {"layer_XX": {"k": (B, W_i, KV, hd), "v": ...}, ...} (+ ssm/conv
+    stacks for hybrid archs, unchanged)."""
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    cache: Dict[str, Any] = {}
+    a = cfg.attention
+    for i in range(cfg.num_layers):
+        w = min(a.window_for_layer(i, max_seq), max_seq)
+        shape = (batch, w, a.num_kv_heads, a.head_dim)
+        cache[f"layer_{i:02d}"] = {
+            "k": jnp.zeros(shape, dtype),
+            "v": jnp.zeros(shape, dtype),
+        }
+    if cfg.ssm is not None and cfg.family == "hybrid":
+        s = cfg.ssm
+        inner = s.expand * cfg.d_model
+        cache["ssm_conv"] = jnp.zeros(
+            (cfg.num_layers, batch, s.conv_width - 1, inner), dtype
+        )
+        cache["ssm_state"] = jnp.zeros(
+            (cfg.num_layers, batch, inner, s.state_dim), jnp.float32
+        )
+    return cache
+
+
+def decode_step_windowed(cfg: ArchConfig, params, cache, tokens, pos):
+    """One decode step with window-sized ring caches (python loop over
+    layers; cache slot = pos mod W, entries always hold the last W
+    positions).  Exactly equivalent to decode_step for window >= pos+1."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    a = cfg.attention
+    b = tokens.shape[0]
+    x = params["embed"].astype(cdt)[tokens[:, 0]][:, None, :]
+    x = x * jnp.asarray(np.sqrt(cfg.d_model), cdt)
+    new_cache = dict(cache)
+    for i in range(cfg.num_layers):
+        name = f"layer_{i:02d}"
+        p = jax.tree.map(lambda t: t[i].astype(cdt), params["blocks"])
+        cl = cache[name]
+        w = cl["k"].shape[1]
+        a_in = layers.rmsnorm(p["ln_attn"], x, cfg.norm_eps)
+        q, k_new, v_new = layers._qkv(p["attn"], a_in, a, pos[:, None],
+                                      cfg.norm_eps)
+        slot = pos % w
+        ck = cl["k"].at[jnp.arange(b), slot].set(k_new[:, 0])
+        cv = cl["v"].at[jnp.arange(b), slot].set(v_new[:, 0])
+        new_cache[name] = {"k": ck, "v": cv}
+        # global position of ring slot s: pos - ((slot - s) mod W)
+        s_idx = jnp.arange(w)[None, :]
+        gpos = pos[:, None] - ((slot[:, None] - s_idx) % w)
+        mask = (gpos >= 0) & (gpos <= pos[:, None]) & (gpos > pos[:, None] - w)
+        o = layers._sdpa(q, ck, cv, mask[:, None, :], a)
+        delta = jnp.einsum("bsq,qd->bsd", o.reshape(b, 1, -1), p["attn"]["wo"])
+        if "mamba" in p:
+            m_out, (conv_s, ssm_s) = ssm.mamba_scan(
+                p["mamba"], a_in, cfg,
+                state=(cache["ssm_conv"][i], cache["ssm_state"][i]),
+            )
+            new_cache["ssm_conv"] = new_cache.get(
+                "ssm_conv", cache["ssm_conv"]
+            ).at[i].set(conv_s)
+            new_cache["ssm_state"] = new_cache.get(
+                "ssm_state", cache["ssm_state"]
+            ).at[i].set(ssm_s)
+            delta = (delta + m_out) * 0.5
+        x = x + delta
+        h_in = layers.rmsnorm(p["ln_mlp"], x, cfg.norm_eps)
+        if "moe" in p:
+            x = x + layers.moe(p["moe"], h_in, cfg.moe)
+        elif "mlp" in p:
+            x = x + layers.mlp(p["mlp"], h_in, cfg.act)
+    x = layers.rmsnorm(params["ln_out"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(cdt))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(cdt))
+    return logits, new_cache
+
+
+def prefill(cfg: ArchConfig, params, tokens=None, embeds=None,
+            max_seq: Optional[int] = None):
+    """Full-sequence forward that also populates a cache.
+
+    Implemented as forward + cache fill in one scan (returns logits, cache).
+    """
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if embeds is None:
+        x = params["embed"].astype(cdt)[tokens]
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), cdt)
+    else:
+        x = embeds.astype(cdt)
+    b, s, _ = x.shape
+    t = max_seq or s
+    windows = jnp.asarray(window_schedule(cfg, s))
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def scan_body(x, layer_in):
+        p, w = layer_in
+        p = jax.tree.map(lambda a: a.astype(cdt), p)
+        out_cache = {}
+        a_in = layers.rmsnorm(p["ln_attn"], x, cfg.norm_eps)
+        delta = jnp.zeros_like(x)
+        if "attn" in p:
+            a = cfg.attention
+            q, k, v = layers._qkv(p["attn"], a_in, a, positions, cfg.norm_eps)
+            if cfg.attn_chunk and s > cfg.attn_chunk:
+                o = layers._flash_sdpa(q, k, v, w, a, cfg.attn_chunk)
+            else:
+                i = jnp.arange(s)[:, None]
+                j = jnp.arange(s)[None, :]
+                mask = (j <= i) & (j > i - w)
+                o = layers._sdpa(q, k, v, mask[None], a)
+            delta = jnp.einsum("bsq,qd->bsd", o.reshape(b, s, -1), p["attn"]["wo"])
+            pad = [(0, 0), (0, t - s), (0, 0), (0, 0)]
+            out_cache["k"] = jnp.pad(k, pad)
+            out_cache["v"] = jnp.pad(v, pad)
+        if "mamba" in p:
+            m_out, (conv_s, ssm_s) = ssm.mamba_scan(p["mamba"], a_in, cfg)
+            out_cache["conv"] = conv_s
+            out_cache["ssm"] = ssm_s
+            delta = (delta + m_out) * 0.5 if "attn" in p else m_out
+        x = x + delta
+        h_in = layers.rmsnorm(p["ln_mlp"], x, cfg.norm_eps)
+        if "moe" in p:
+            x = x + layers.moe(p["moe"], h_in, cfg.moe)
+        elif "mlp" in p:
+            x = x + layers.mlp(p["mlp"], h_in, cfg.act)
+        return x, out_cache
+
+    x, cache = jax.lax.scan(scan_body, x, (params["blocks"], windows),
+                            unroll=1 if cfg.scan_layers else cfg.num_layers)
+    x = layers.rmsnorm(params["ln_out"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(cdt))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(cdt))
+    return logits, cache

@@ -1,0 +1,5 @@
+from repro.runtime.fault import FaultInjector, retry_step
+from repro.runtime.monitor import StepMonitor
+from repro.runtime.elastic import replan_mesh
+
+__all__ = ["FaultInjector", "retry_step", "StepMonitor", "replan_mesh"]

@@ -1,0 +1,37 @@
+"""Elastic scaling: re-derive a mesh for the devices that survive.
+
+Restart-based elasticity (the scheme used by production TPU training): on
+node loss the job restarts on the remaining N' devices; ``replan_mesh``
+picks the closest (data, model) factorization, and the checkpoint manager's
+global-view arrays reshard onto it (``CheckpointManager.restore`` with the
+new shardings).  Tested end-to-end in tests/test_fault_tolerance.py by
+saving on an 8-device mesh and restoring on 4.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+
+def replan_mesh(
+    num_devices: int,
+    prefer_model: int = 16,
+    axis_names: Tuple[str, str] = ("data", "model"),
+):
+    """Closest 2-D mesh for ``num_devices``: model axis <= prefer_model and
+    dividing num_devices; data gets the rest."""
+    import jax
+
+    model = 1
+    for cand in range(min(prefer_model, num_devices), 0, -1):
+        if num_devices % cand == 0:
+            model = cand
+            break
+    data = num_devices // model
+    return jax.make_mesh((data, model), axis_names)
+
+
+def surviving_devices(all_devices: Sequence, lost: Sequence[int]):
+    """Filter out failed device ids (simulation hook for tests)."""
+    lost_set = set(lost)
+    return [d for d in all_devices if d.id not in lost_set]

@@ -1,0 +1,50 @@
+"""Step-time monitoring + straggler detection.
+
+On a large mesh a straggling host shows up as a step-time outlier (all
+collectives serialize on the slowest participant).  The monitor keeps a
+rolling window of step times, flags p99/p50 outliers, and the loop can react
+(log, checkpoint early, or request an elastic replan)."""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Deque, List, Optional
+
+
+class StepMonitor:
+    def __init__(self, window: int = 100, straggler_factor: float = 3.0):
+        self.times: Deque[float] = deque(maxlen=window)
+        self.factor = straggler_factor
+        self.straggler_events: List[dict] = []
+        self._t0: Optional[float] = None
+        self.step = 0
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self, step: int) -> dict:
+        dt = time.perf_counter() - (self._t0 or time.perf_counter())
+        self.step = step
+        info = {"step": step, "sec": dt}
+        if len(self.times) >= 10:
+            p50 = self.percentile(50)
+            if dt > self.factor * p50:
+                info["straggler"] = True
+                self.straggler_events.append(info)
+        self.times.append(dt)
+        return info
+
+    def percentile(self, q: float) -> float:
+        if not self.times:
+            return 0.0
+        xs = sorted(self.times)
+        i = min(len(xs) - 1, int(len(xs) * q / 100))
+        return xs[i]
+
+    def summary(self) -> dict:
+        return {
+            "steps": self.step + 1,
+            "p50": self.percentile(50),
+            "p99": self.percentile(99),
+            "stragglers": len(self.straggler_events),
+        }

@@ -1,0 +1,100 @@
+"""Continuous-batching serving engine.
+
+Slot-based scheduling over one jitted decode step: requests occupy fixed
+batch slots, finished/empty slots admit queued requests between steps
+(prefill for a new request runs token-by-token through the same decode step,
+so the batch never re-compiles), EOS or max-tokens retires a slot.  This is
+the standard TPU serving shape (static batch, dynamic occupancy) scaled down
+to run anywhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int = 16
+    # filled by the engine
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model, params, batch_slots: int = 4,
+                 max_seq: int = 256, eos_id: Optional[int] = None):
+        self.model = model
+        self.params = params
+        self.slots = batch_slots
+        self.max_seq = max_seq
+        self.eos = eos_id
+        self.queue: Deque[Request] = deque()
+        self.active: List[Optional[Request]] = [None] * batch_slots
+        self.pos = np.zeros(batch_slots, np.int32)
+        self.pending_feed: List[Deque[int]] = [deque() for _ in range(batch_slots)]
+        self.cache = model.init_cache(batch_slots, max_seq)
+        self.next_tok = np.zeros(batch_slots, np.int32)
+        self._step = jax.jit(model.decode_step)
+        self.steps = 0
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.popleft()
+                self.active[s] = req
+                self.pos[s] = 0
+                feed = deque(req.prompt)
+                self.pending_feed[s] = feed
+                self.next_tok[s] = feed.popleft()
+
+    def step(self) -> int:
+        """One engine step (one decode for every occupied slot).
+
+        Returns the number of active requests after the step."""
+        self._admit()
+        occupied = [s for s in range(self.slots) if self.active[s] is not None]
+        if not occupied:
+            return 0
+        toks = jnp.asarray(self.next_tok[:, None])
+        pos = jnp.asarray(self.pos)
+        logits, self.cache = self._step(self.params, self.cache, toks, pos)
+        logits = np.asarray(logits[:, 0])
+        self.steps += 1
+        for s in occupied:
+            req = self.active[s]
+            self.pos[s] += 1
+            if self.pending_feed[s]:
+                # still prefilling this request's prompt
+                self.next_tok[s] = self.pending_feed[s].popleft()
+                continue
+            nxt = int(np.argmax(logits[s]))
+            req.generated.append(nxt)
+            self.next_tok[s] = nxt
+            if (
+                len(req.generated) >= req.max_new
+                or (self.eos is not None and nxt == self.eos)
+                or self.pos[s] >= self.max_seq - 1
+            ):
+                req.done = True
+                self.active[s] = None  # retire; slot admits next request
+        return sum(r is not None for r in self.active)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
+        finished: List[Request] = []
+        seen: Dict[int, Request] = {}
+        for _ in range(max_steps):
+            alive = self.step()
+            if alive == 0 and not self.queue:
+                break
+        return finished

@@ -1,0 +1,8 @@
+from repro.sharding.rules import (
+    batch_specs,
+    cache_specs,
+    param_specs,
+    resolve_axes,
+)
+
+__all__ = ["batch_specs", "cache_specs", "param_specs", "resolve_axes"]

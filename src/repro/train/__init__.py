@@ -1,0 +1,10 @@
+from repro.train.optimizer import adamw_init, adamw_update, lr_schedule
+from repro.train.step import make_train_step, TrainState
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "lr_schedule",
+    "make_train_step",
+    "TrainState",
+]

@@ -1,0 +1,74 @@
+"""Gradient compression for cross-pod data parallelism.
+
+At 1000+ nodes the cross-pod (DCN) all-reduce is the scarce resource; the
+standard tricks are quantization and sparsification with error feedback.
+Implemented here as pure functions + a shard_map'd compressed all-reduce so
+they compose with any training loop:
+
+  * int8 symmetric quantization (per-tensor scale): 4x fewer bytes on the
+    wire; decompress-after-reduce keeps the accumulator exact per shard.
+  * top-k sparsification with error feedback (memory carried between steps).
+
+The compressed all-reduce quantizes, all_gathers the int8 payload +
+scales (cheaper than all_reduce at int8 width), and reduces locally in
+fp32 — numerically equivalent to all_reduce up to quantization error,
+which the tests bound.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def topk_sparsify(x: jnp.ndarray, ratio: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Keep the top-|ratio| entries (by magnitude); returns (values, indices)."""
+    flat = x.reshape(-1)
+    k = max(1, int(flat.shape[0] * ratio))
+    vals, idx = lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx
+
+
+def topk_restore(shape, values, idx) -> jnp.ndarray:
+    import math
+
+    n = math.prod(int(s) for s in shape)
+    flat = jnp.zeros((n,), values.dtype)
+    return flat.at[idx].set(values).reshape(shape)
+
+
+def compressed_allreduce_int8(x: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """Mean all-reduce over ``axis`` with int8 wire format (inside shard_map)."""
+    q, scale = quantize_int8(x)
+    qs = lax.all_gather(q, axis)  # int8 payload: 4x cheaper than fp32
+    ss = lax.all_gather(scale, axis)
+    deq = qs.astype(jnp.float32) * ss.reshape((-1,) + (1,) * x.ndim)
+    return jnp.mean(deq, axis=0)
+
+
+def compressed_allreduce_topk(
+    x: jnp.ndarray, axis: str, ratio: float, error: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k sparsified mean all-reduce with error feedback.
+
+    Returns (reduced, new_error): new_error carries what was dropped locally
+    (added back into the next step's gradient — the standard EF-SGD trick).
+    """
+    acc = x + error
+    vals, idx = topk_sparsify(acc, ratio)
+    sparse = topk_restore(x.shape, vals, idx)
+    new_error = acc - sparse
+    reduced = lax.pmean(sparse, axis)
+    return reduced, new_error

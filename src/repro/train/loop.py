@@ -1,0 +1,106 @@
+"""Production training loop: checkpoint/restart, fault retry, straggler
+monitoring, deterministic data, preemption hook.
+
+The loop is a transaction machine:
+
+    state(step) --train_step--> state(step+1)     [retry on transient fault]
+                 \--every ckpt_every--> async checkpoint (atomic publish)
+
+Restart: ``run(..., resume=True)`` finds the newest checkpoint, restores
+(optionally onto a *different* mesh — elastic), replays the loader to the
+saved step (free: batches are pure functions of the step), and continues.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.config import TrainConfig
+from repro.data.loader import DeterministicLoader
+from repro.runtime.fault import FaultInjector, retry_step
+from repro.runtime.monitor import StepMonitor
+from repro.train.optimizer import adamw_init
+from repro.train.step import TrainState
+
+log = logging.getLogger("repro.train")
+
+
+@dataclasses.dataclass
+class LoopResult:
+    final_step: int
+    losses: List[float]
+    monitor: Dict[str, Any]
+    restored_from: Optional[int]
+    retries: int
+
+
+def run_training(
+    model,
+    train_step: Callable,
+    loader: DeterministicLoader,
+    tcfg: TrainConfig,
+    steps: int,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 50,
+    resume: bool = False,
+    state: Optional[TrainState] = None,
+    state_shardings=None,
+    fault: Optional[FaultInjector] = None,
+    preempt_at: Optional[int] = None,
+    seed: int = 0,
+) -> LoopResult:
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    monitor = StepMonitor()
+    retries = 0
+    restored_from = None
+
+    if state is None:
+        params = model.init(jax.random.key(seed))
+        state = TrainState(params=params, opt=adamw_init(params))
+    start = 0
+    if resume and mgr is not None and mgr.latest_step() is not None:
+        state, extra = mgr.restore(state, shardings=state_shardings)
+        start = int(extra.get("step", mgr.latest_step()))
+        restored_from = start
+        log.info("resumed from step %d", start)
+
+    losses: List[float] = []
+    step = start
+    while step < steps:
+        batch = loader.batch_at(step)
+
+        def one_step():
+            if fault is not None:
+                fault.maybe_fail(step)
+            return train_step(state, batch)
+
+        def on_retry(attempt, err):
+            nonlocal retries
+            retries += 1
+
+        monitor.start()
+        new_state, metrics = retry_step(one_step, on_retry=on_retry)
+        info = monitor.stop(step)
+        if info.get("straggler"):
+            log.warning("straggler step %d: %.3fs", step, info["sec"])
+        state = new_state  # transactional replace only on success
+        losses.append(float(metrics["loss"]))
+        step += 1
+
+        if mgr is not None and step % ckpt_every == 0:
+            mgr.save(step, state, extra={"step": step})
+        if preempt_at is not None and step >= preempt_at:
+            # preemption hook: force a final checkpoint and stop
+            if mgr is not None:
+                mgr.save(step, state, extra={"step": step}, blocking=True)
+            return LoopResult(step, losses, monitor.summary(), restored_from,
+                              retries)
+
+    if mgr is not None:
+        mgr.save(steps, state, extra={"step": steps}, blocking=True)
+    return LoopResult(steps, losses, monitor.summary(), restored_from, retries)

@@ -1,0 +1,111 @@
+"""AdamW with cosine / WSD (warmup-stable-decay, MiniCPM) schedules.
+
+State layout (MaxText-style memory discipline):
+  * live params: ``param_dtype`` (bf16) — what the forward pass reads
+  * master:      fp32 copy (updates accumulate without bf16 round-trip loss)
+  * m, v:        fp32 first/second moments
+
+All state mirrors the parameter tree so one PartitionSpec tree shards
+everything (optimizer state is FSDP-sharded exactly like its parameter).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+def lr_schedule(tcfg: TrainConfig, step):
+    """cosine | wsd | constant, with linear warmup."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(tcfg.warmup_steps, 1), 1.0)
+    base = tcfg.learning_rate
+    if tcfg.schedule == "constant":
+        return base * warm
+    if tcfg.schedule == "wsd":
+        # warmup -> stable plateau -> 1-sqrt decay (MiniCPM, arXiv:2404.06395)
+        decay_start = tcfg.warmup_steps + tcfg.stable_steps
+        frac = jnp.clip(
+            (step - decay_start) / jnp.maximum(tcfg.decay_steps, 1), 0.0, 1.0
+        )
+        decay = 1.0 - (1.0 - tcfg.min_lr_ratio) * jnp.sqrt(frac)
+        return base * warm * decay
+    # cosine
+    frac = jnp.clip(
+        (step - tcfg.warmup_steps) / jnp.maximum(tcfg.decay_steps, 1), 0.0, 1.0
+    )
+    cos = 0.5 * (1 + jnp.cos(math.pi * frac))
+    return base * warm * (tcfg.min_lr_ratio + (1 - tcfg.min_lr_ratio) * cos)
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    f32 = lambda t: jax.tree.map(lambda p: p.astype(jnp.float32), t)
+    zeros = lambda t: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), t)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": f32(params),
+        "m": zeros(params),
+        "v": zeros(params),
+    }
+
+
+def adamw_abstract(params) -> Dict[str, Any]:
+    """ShapeDtypeStruct state tree for the dry-run."""
+    sds = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return {
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "master": jax.tree.map(sds, params),
+        "m": jax.tree.map(sds, params),
+        "v": jax.tree.map(sds, params),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(tcfg: TrainConfig, params, grads, opt):
+    """One AdamW step with global-norm clipping.  Returns (params, opt, lr)."""
+    step = opt["step"] + 1
+    lr = lr_schedule(tcfg, step)
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, tcfg.grad_clip / jnp.maximum(gn, 1e-9))
+    bc1 = 1 - tcfg.beta1 ** step.astype(jnp.float32)
+    bc2 = 1 - tcfg.beta2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m = tcfg.beta1 * m + (1 - tcfg.beta1) * g
+        v = tcfg.beta2 * v + (1 - tcfg.beta2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + tcfg.eps) + tcfg.weight_decay * master
+        return m, v, master - lr * delta
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(opt["m"])
+    flat_v = treedef.flatten_up_to(opt["v"])
+    flat_ma = treedef.flatten_up_to(opt["master"])
+    new_m, new_v, new_ma = [], [], []
+    for g, m, v, ma in zip(flat_g, flat_m, flat_v, flat_ma):
+        m2, v2, ma2 = upd(g, m, v, ma)
+        new_m.append(m2)
+        new_v.append(v2)
+        new_ma.append(ma2)
+    pdt = jax.tree.leaves(params)[0].dtype
+    new_params = jax.tree.unflatten(
+        treedef, [ma.astype(pdt) for ma in new_ma]
+    )
+    new_opt = {
+        "step": step,
+        "master": jax.tree.unflatten(treedef, new_ma),
+        "m": jax.tree.unflatten(treedef, new_m),
+        "v": jax.tree.unflatten(treedef, new_v),
+    }
+    return new_params, new_opt, {"lr": lr, "grad_norm": gn}

@@ -1,0 +1,173 @@
+"""jit'd train / prefill / decode step factories with explicit shardings.
+
+These are the functions the multi-pod dry-run lowers and the launchers run.
+Distribution is pjit/GSPMD: params + optimizer state shard per
+``repro.sharding`` rules (FSDP over data axes, TP over model), the batch
+shards over the DP axes, and XLA inserts the collectives (grads reduce over
+DP, activation all-reduces over TP).  ``policy.grad_reduce`` selects
+reduce_scatter-style FSDP (params sharded over data => XLA emits
+reduce-scatter + all-gather) vs pure replicated DP.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ArchConfig, ShardingPolicy, TrainConfig
+from repro.models.model import Model
+from repro.sharding.rules import batch_specs, cache_specs, param_specs
+from repro.train import optimizer as opt_lib
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Dict[str, Any]
+
+
+def state_specs(model: Model, mesh: Mesh, policy: ShardingPolicy):
+    ps = param_specs(model, mesh, policy)
+    return TrainState(
+        params=ps,
+        opt={
+            "step": P(),
+            "master": ps,
+            "m": ps,
+            "v": ps,
+        },
+    )
+
+
+def _sharding_tree(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _cache_sharding(mesh, cspec, cache_struct):
+    """Path-aware cache shardings (stacked / windowed / state layouts)."""
+    from jax.tree_util import tree_map_with_path, keystr
+
+    return tree_map_with_path(
+        lambda path, x: NamedSharding(mesh, cspec(keystr(path), x)),
+        cache_struct,
+    )
+
+
+def make_train_step(model: Model, mesh: Mesh, policy: ShardingPolicy,
+                    tcfg: TrainConfig, global_batch: int, seq_len: int,
+                    donate: bool = True, with_mask: bool = False):
+    """Returns (jitted_step, state_shardings, batch_shardings).
+
+    with_mask: batches carry a per-token loss mask (the SA-dedup pipeline's
+    keep-mask) — adds its sharding so pytrees match."""
+    cfg = model.cfg
+    sspecs = state_specs(model, mesh, policy)
+    bspecs = batch_specs(cfg, mesh, policy, global_batch, kind="train")
+    if with_mask:
+        first = bspecs["labels"]
+        bspecs = dict(bspecs, mask=first)
+
+    def step(state: TrainState, batch):
+        def loss_of(p):
+            return model.loss(p, batch)
+
+        if tcfg.microbatches > 1:
+            # gradient accumulation over the leading batch dim
+            mb = tcfg.microbatches
+
+            def one(i, carry):
+                loss_acc, grad_acc = carry
+                sl = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * (x.shape[0] // mb), x.shape[0] // mb
+                    ),
+                    batch,
+                )
+                (l, _), g = jax.value_and_grad(
+                    lambda p: model.loss(p, sl), has_aux=True
+                )(state.params)
+                return (
+                    loss_acc + l / mb,
+                    jax.tree.map(lambda a, b: a + b / mb, grad_acc, g),
+                )
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            loss, grads = jax.lax.fori_loop(0, mb, one, (0.0, zero_g))
+        else:
+            (loss, _), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                state.params
+            )
+        params, opt, info = opt_lib.adamw_update(
+            tcfg, state.params, grads, state.opt
+        )
+        metrics = {"loss": loss, **info}
+        return TrainState(params, opt), metrics
+
+    state_sh = _sharding_tree(mesh, sspecs)
+    batch_sh = _sharding_tree(mesh, bspecs)
+    jitted = jax.jit(
+        step,
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, NamedSharding(mesh, P())),
+        donate_argnums=(0,) if donate else (),
+    )
+    return jitted, state_sh, batch_sh
+
+
+def make_prefill_step(model: Model, mesh: Mesh, policy: ShardingPolicy,
+                      batch: int, seq_len: int, max_seq: Optional[int] = None):
+    cfg = model.cfg
+    pspecs = param_specs(model, mesh, policy)
+    bspecs = batch_specs(cfg, mesh, policy, batch, kind="prefill")
+
+    def step(params, batch_in):
+        return model.prefill(
+            params,
+            tokens=batch_in.get("tokens"),
+            embeds=batch_in.get("embeds"),
+            max_seq=max_seq or seq_len,
+        )
+
+    in_b = {k: v for k, v in bspecs.items() if k != "labels"}
+    cspec = cache_specs(cfg, mesh, policy, batch)
+    cache_struct = model.abstract_cache(batch, max_seq or seq_len)
+    cache_sh = _cache_sharding(mesh, cspec, cache_struct)
+    param_sh = _sharding_tree(mesh, pspecs)
+    batch_sh = _sharding_tree(mesh, in_b)
+    jitted = jax.jit(
+        step, in_shardings=(param_sh, batch_sh), out_shardings=(None, cache_sh)
+    )
+    return jitted, param_sh, batch_sh
+
+
+def make_decode_step(model: Model, mesh: Mesh, policy: ShardingPolicy,
+                     batch: int, max_seq: int, long_context: bool = False):
+    """serve_step: one new token against a seq_len KV cache."""
+    cfg = model.cfg
+    pspecs = param_specs(model, mesh, policy)
+    dspecs = batch_specs(cfg, mesh, policy, batch, kind="decode")
+    cspec = cache_specs(cfg, mesh, policy, batch, long_context=long_context)
+
+    cache_struct = model.abstract_cache(batch, max_seq)
+    cache_sh = _cache_sharding(mesh, cspec, cache_struct)
+
+    def step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    param_sh = _sharding_tree(mesh, pspecs)
+    tok_sh = NamedSharding(mesh, dspecs["tokens"])
+    pos_sh = NamedSharding(mesh, dspecs["pos"])
+    jitted = jax.jit(
+        step,
+        in_shardings=(param_sh, cache_sh, tok_sh, pos_sh),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(1,),
+    )
+    return jitted, param_sh, cache_sh, (tok_sh, pos_sh)

@@ -1,0 +1,37 @@
+"""Shared pytest fixtures.
+
+NOTE: XLA_FLAGS / device-count forcing is deliberately NOT set here — smoke
+tests and benches must see the real single CPU device.  Multi-device tests
+run in subprocesses via the ``run_multidev`` fixture.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="session")
+def run_multidev():
+    """Run a python snippet in a subprocess with N fake devices."""
+
+    def _run(code: str, devices: int = 8, timeout: int = 900) -> str:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        proc = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(code)],
+            capture_output=True,
+            text=True,
+            env=env,
+            timeout=timeout,
+        )
+        assert proc.returncode == 0, (
+            f"subprocess failed\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+        )
+        return proc.stdout
+
+    return _run

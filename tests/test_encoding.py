@@ -1,0 +1,104 @@
+"""Unit + property tests for the numeric prefix encoding (paper §IV-B)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.config import SAConfig
+from repro.core import encoding
+from repro.core.types import pack_index, unpack_index, global_index
+
+
+CFGS = [
+    SAConfig(vocab_size=4, packing="base"),  # DNA, paper-faithful
+    SAConfig(vocab_size=4, packing="bits"),  # DNA, TPU-optimized
+    SAConfig(vocab_size=4, chars_per_word=3, key_words=2, packing="base"),
+    SAConfig(vocab_size=255, packing="bits"),  # byte alphabet
+    SAConfig(vocab_size=31999, packing="bits"),  # LM vocab
+]
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=lambda c: f"{c.packing}-v{c.vocab_size}")
+def test_pack_unpack_roundtrip(cfg):
+    rng = np.random.default_rng(0)
+    k = cfg.prefix_len
+    win = rng.integers(0, cfg.vocab_size + 1, size=(64, k)).astype(np.int32)
+    words = np.asarray(encoding.pack_words(jnp.asarray(win), cfg))
+    back = encoding.unpack_words_np(words, cfg)
+    np.testing.assert_array_equal(back, win)
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=lambda c: f"{c.packing}-v{c.vocab_size}")
+def test_pack_order_preserving(cfg):
+    """key(a) < key(b) lexicographically  <=>  window a < window b."""
+    rng = np.random.default_rng(1)
+    k = cfg.prefix_len
+    win = rng.integers(0, min(cfg.vocab_size + 1, 4), size=(128, k)).astype(np.int32)
+    words = np.asarray(encoding.pack_words(jnp.asarray(win), cfg)).astype(np.int64)
+    flat = words[:, 0] * (1 << 31) + words[:, 1]
+    order_key = np.argsort(flat, kind="stable")
+    order_lex = sorted(range(len(win)), key=lambda i: tuple(win[i]))
+    keys_sorted = flat[order_key]
+    lex_sorted = flat[np.array(order_lex)]
+    np.testing.assert_array_equal(keys_sorted, lex_sorted)
+
+
+@given(
+    read_id=st.integers(0, 2**20),
+    offset=st.integers(0, 255),
+)
+@settings(max_examples=50, deadline=None)
+def test_index_pack_roundtrip(read_id, offset):
+    sb = 8
+    hi, lo = pack_index(np.array([read_id]), np.array([offset]), sb)
+    r, o = unpack_index(hi, lo, sb)
+    assert int(r[0]) == read_id and int(o[0]) == offset
+    g = global_index(hi, lo)
+    assert int(g[0]) == (read_id << sb) | offset
+
+
+def test_index_pack_matches_jnp():
+    sb = 8
+    rng = np.random.default_rng(2)
+    r = rng.integers(0, 2**20, size=(32,))
+    o = rng.integers(0, 256, size=(32,))
+    hi_np, lo_np = pack_index(r.astype(np.int64), o.astype(np.int64), sb)
+    hi_j, lo_j = pack_index(jnp.asarray(r, jnp.int32), jnp.asarray(o, jnp.int32), sb)
+    np.testing.assert_array_equal(hi_np, np.asarray(hi_j))
+    np.testing.assert_array_equal(lo_np, np.asarray(lo_j))
+
+
+def test_window_at_matches_slicing():
+    rng = np.random.default_rng(3)
+    reads = rng.integers(1, 5, size=(10, 12)).astype(np.int32)
+    rows = np.array([0, 3, 9, 5], np.int32)
+    offs = np.array([0, 5, 11, 2], np.int32)
+    k = 6
+    win = np.asarray(encoding.window_at(jnp.asarray(reads), jnp.asarray(rows), jnp.asarray(offs), k))
+    for i, (r, o) in enumerate(zip(rows, offs)):
+        expect = np.zeros(k, np.int32)
+        seg = reads[r, o : o + k]
+        expect[: len(seg)] = seg
+        np.testing.assert_array_equal(win[i], expect)
+
+
+def test_window_at_out_of_range_row_is_zero():
+    reads = jnp.ones((4, 8), jnp.int32)
+    win = np.asarray(encoding.window_at(reads, jnp.array([-1, 7]), jnp.array([0, 0]), 4))
+    assert (win == 0).all()
+
+
+def test_chars_per_word_derivation():
+    assert SAConfig(vocab_size=4, packing="base").resolved_chars_per_word() == 13
+    # paper: base-5, 2^31 words hold 13 chars (5^13 = 1.2e9 < 2^31)
+    assert SAConfig(vocab_size=4, packing="bits").resolved_chars_per_word() == 10
+    assert SAConfig(vocab_size=255, packing="bits").resolved_chars_per_word() == 3
+
+
+def test_all_suffix_windows_shapes():
+    reads = jnp.arange(24, dtype=jnp.int32).reshape(2, 12) % 4 + 1
+    win = encoding.all_suffix_windows(reads, 5)
+    assert win.shape == (2, 13, 5)
+    # offset 12 = the $-only suffix: all padding
+    assert (np.asarray(win[:, 12]) == 0).all()

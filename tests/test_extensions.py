@@ -1,0 +1,159 @@
+"""Extended coverage: compressed collectives under shard_map, gradient
+accumulation equivalence, dedup units, SA workload configs."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ShardingPolicy, TrainConfig, get_arch
+from repro.models.model import Model
+
+
+def test_dedup_finds_planted_duplicates():
+    from repro.config import SAConfig
+    from repro.data.corpus import synth_token_corpus
+    from repro.data.dedup import dedup_corpus
+
+    toks, planted = synth_token_corpus(2000, 64, seed=1, dup_fraction=0.06,
+                                       dup_span=40)
+    _, keep, stats = dedup_corpus(
+        toks, min_len=32, cfg=SAConfig(vocab_size=64, packing="bits"),
+        mode="doubling",
+    )
+    assert stats["num_spans"] > 0
+    for src, dst, span in planted:
+        if np.array_equal(toks[src:src + span], toks[dst:dst + span]):
+            assert not (keep[src:src + span].all() and keep[dst:dst + span].all())
+    # no false positives on the untouched prefix region? (weak check: most
+    # tokens survive)
+    assert keep.mean() > 0.8
+
+
+def test_dedup_modes_agree():
+    from repro.config import SAConfig
+    from repro.data.corpus import synth_token_corpus
+    from repro.data.dedup import find_duplicate_spans
+
+    toks, _ = synth_token_corpus(600, 16, seed=2, dup_fraction=0.05,
+                                 dup_span=48)
+    cfg = SAConfig(vocab_size=16, packing="bits")
+    a = set(find_duplicate_spans(toks, 40, cfg, mode="scheme"))
+    b = set(find_duplicate_spans(toks, 40, cfg, mode="doubling"))
+    assert a == b
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    """microbatches=2 must produce (near-)identical updates to one batch."""
+    from repro.train.step import make_train_step, TrainState
+    from repro.train.optimizer import adamw_init
+
+    cfg = dataclasses.replace(get_arch("tiny-minicpm"), param_dtype="float32",
+                              compute_dtype="float32")
+    model = Model(cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    params = model.init(jax.random.key(0), dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 16)).astype(np.int32)),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 16)).astype(np.int32)),
+    }
+    outs = {}
+    for mb in (1, 2):
+        tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=0,
+                           schedule="constant", microbatches=mb)
+        step, _, _ = make_train_step(model, mesh, ShardingPolicy(), tcfg, 4,
+                                     16, donate=False)
+        state = TrainState(params=params, opt=adamw_init(params))
+        new_state, m = step(state, batch)
+        outs[mb] = (new_state, float(m["loss"]))
+    assert outs[1][1] == pytest.approx(outs[2][1], rel=1e-5)
+    l1 = jax.tree.leaves(outs[1][0].params)
+    l2 = jax.tree.leaves(outs[2][0].params)
+    for a, b in zip(l1, l2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                                   atol=1e-5)
+
+
+@pytest.mark.slow
+def test_compressed_allreduce_8dev(run_multidev):
+    out = run_multidev(
+        """
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.train.compression import (
+            compressed_allreduce_int8, compressed_allreduce_topk)
+
+        mesh = Mesh(np.array(jax.devices()), ("dp",))
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(8, 64)).astype(np.float32)
+
+        def f(xl):
+            return compressed_allreduce_int8(xl[0], "dp")[None]
+
+        sm = jax.shard_map(f, mesh=mesh, in_specs=P("dp"), out_specs=P("dp"))
+        got = np.asarray(jax.jit(sm)(x))
+        want = x.mean(axis=0)
+        for row in got:
+            np.testing.assert_allclose(row, want, atol=2e-2)  # int8 grid
+
+        # top-k with error feedback over several rounds approaches the mean
+        err = np.zeros((8, 64), np.float32)
+        acc = np.zeros((8, 64), np.float32)
+        def g(xl, el):
+            r, e = compressed_allreduce_topk(xl[0], "dp", 0.25, el[0])
+            return r[None], e[None]
+        sm2 = jax.shard_map(g, mesh=mesh, in_specs=(P("dp"), P("dp")),
+                            out_specs=(P("dp"), P("dp")))
+        jg = jax.jit(sm2)
+        for _ in range(30):
+            r, err = jg(x, err)
+            acc += np.asarray(r)
+        np.testing.assert_allclose(acc[0] / 30, want, atol=0.3)
+        print("OK")
+        """
+    )
+    assert "OK" in out
+
+
+def test_sa_workload_configs():
+    from repro.configs.suffix_array import grouper_genome, grouper_small
+
+    g = grouper_genome()
+    assert g.num_reads == 325_718_730 and g.read_len == 200  # paper §I
+    assert g.sa.samples_per_shard == 10_000  # paper §IV-A
+    s = grouper_small()
+    assert s.num_reads * s.read_len < 1_000_000
+
+
+def test_window_schedule_patterns():
+    from repro.models.transformer import window_schedule
+
+    cfg = get_arch("gemma3-27b")
+    w = window_schedule(cfg, 32768)
+    assert (w[:5] == 1024).all() and w[5] == 32768  # 5:1 local:global
+    assert w.shape == (62,)
+    cfg = get_arch("mixtral-8x7b")
+    w = window_schedule(cfg, 32768)
+    assert (w == 4096).all()  # SWA everywhere
+
+
+def test_param_counts_sane():
+    """Declared param counts should be in the right ballpark per name."""
+    expect = {
+        "mixtral-8x7b": (45e9, 50e9),
+        "gemma3-27b": (25e9, 30e9),
+        "granite-20b": (18e9, 23e9),
+        "minicpm-2b": (2.2e9, 3.2e9),
+        "gemma3-1b": (0.9e9, 1.3e9),
+        # our xLSTM blocks skip the paper's 2x up-projection (DESIGN.md §5),
+        # so the count lands below the name's 125M
+        "xlstm-125m": (0.05e9, 0.20e9),
+        "hymba-1.5b": (1.2e9, 2.0e9),
+    }
+    for name, (lo, hi) in expect.items():
+        model = Model(get_arch(name))
+        n = model.num_params()
+        assert lo < n < hi, (name, n)

@@ -1,0 +1,122 @@
+"""End-to-end fault tolerance: injected failures + retry, checkpoint/resume
+equivalence, preemption, elastic restore onto a different mesh."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ShardingPolicy, TrainConfig, get_arch
+from repro.data.loader import DeterministicLoader
+from repro.models.model import Model
+from repro.runtime.fault import FaultInjector
+from repro.train.loop import run_training
+from repro.train.optimizer import adamw_init
+from repro.train.step import TrainState, make_train_step
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_arch("tiny-minicpm")
+    model = Model(cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    policy = ShardingPolicy()
+    tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=2, decay_steps=50)
+    step, state_sh, _ = make_train_step(
+        model, mesh, policy, tcfg, global_batch=4, seq_len=16, donate=False
+    )
+    toks = (np.arange(1, 20_001) * 7 % (cfg.vocab_size - 1) + 1).astype(np.int32)
+    loader = DeterministicLoader(toks, batch=4, seq_len=16, seed=3)
+    return model, step, state_sh, loader, tcfg
+
+
+def test_loss_decreases_over_short_run(setup, tmp_path):
+    model, step, state_sh, loader, tcfg = setup
+    res = run_training(model, step, loader, tcfg, steps=12,
+                       ckpt_dir=str(tmp_path / "c1"), ckpt_every=100)
+    assert len(res.losses) == 12
+    assert res.losses[-1] < res.losses[0]
+
+
+def test_fault_injection_retries_and_completes(setup, tmp_path):
+    model, step, state_sh, loader, tcfg = setup
+    fault = FaultInjector(fail_steps=[3, 7], max_failures_per_step=2)
+    res = run_training(model, step, loader, tcfg, steps=10, fault=fault)
+    assert res.final_step == 10
+    assert fault.injected == 4  # two failures at each of two steps
+    assert res.retries == 4
+
+
+def test_resume_is_bitwise_equivalent(setup, tmp_path):
+    """preempt at step 6, resume, and match an uninterrupted run exactly."""
+    model, step, state_sh, loader, tcfg = setup
+    d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
+    full = run_training(model, step, loader, tcfg, steps=10, ckpt_dir=d1,
+                        ckpt_every=100, seed=5)
+    part = run_training(model, step, loader, tcfg, steps=10, ckpt_dir=d2,
+                        ckpt_every=3, preempt_at=6, seed=5)
+    assert part.final_step == 6
+    resumed = run_training(model, step, loader, tcfg, steps=10, ckpt_dir=d2,
+                           resume=True, ckpt_every=100, seed=5)
+    assert resumed.restored_from == 6
+    np.testing.assert_allclose(
+        full.losses[6:], resumed.losses, rtol=1e-6,
+        err_msg="resumed loss trajectory diverged from uninterrupted run",
+    )
+
+
+def test_elastic_restore_other_mesh(run_multidev):
+    """Save params on an 8-device (4,2) mesh, restore onto (2,2) with 4."""
+    out = run_multidev(
+        """
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.checkpoint.manager import CheckpointManager
+        import tempfile, os
+
+        d = tempfile.mkdtemp()
+        mesh8 = jax.make_mesh((4, 2), ("data", "model"))
+        tree = {"w": jnp.arange(64.0).reshape(8, 8)}
+        sh8 = {"w": NamedSharding(mesh8, P("data", "model"))}
+        placed = jax.tree.map(jax.device_put, tree, sh8)
+        mgr = CheckpointManager(d)
+        mgr.save(5, placed, extra={"step": 5}, blocking=True)
+
+        # "failure": restart on only 4 devices, different factorization
+        mesh4 = jax.sharding.Mesh(np.array(jax.devices()[:4]).reshape(2, 2),
+                                  ("data", "model"))
+        sh4 = {"w": NamedSharding(mesh4, P("model", "data"))}
+        out, extra = mgr.restore(tree, shardings=sh4)
+        assert extra["step"] == 5
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.arange(64.0).reshape(8, 8))
+        assert out["w"].sharding.mesh.devices.shape == (2, 2)
+        print("OK")
+        """
+    )
+    assert "OK" in out
+
+
+def test_straggler_monitor_flags_outliers():
+    import time
+
+    from repro.runtime.monitor import StepMonitor
+
+    mon = StepMonitor(window=50, straggler_factor=3.0)
+    for s in range(15):
+        mon.start()
+        time.sleep(0.001)
+        mon.stop(s)
+    mon.start()
+    time.sleep(0.05)
+    info = mon.stop(15)
+    assert info.get("straggler"), info
+    assert mon.summary()["stragglers"] == 1
+
+
+def test_replan_mesh_factorizations():
+    from repro.runtime.elastic import replan_mesh
+
+    # full pod
+    m = replan_mesh(1, prefer_model=16)
+    assert m.devices.size == 1

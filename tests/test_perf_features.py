@@ -1,0 +1,114 @@
+"""Correctness of the §Perf optimizations (exactness vs the naive paths)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_arch
+from repro.models.model import Model
+
+
+def test_flash_attention_matches_naive():
+    from repro.models import layers
+    from repro.models.params import init_params
+
+    cfg = get_arch("tiny-gemma3")  # local:global pattern + qk_norm
+    defs = layers.attention_defs(cfg)
+    p = init_params(defs, jax.random.key(0), jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 64, cfg.d_model), jnp.float32)
+    for w in (64, 8):  # global + sliding window
+        naive = layers.attention_train(p, x, cfg.attention, jnp.int32(w),
+                                       cfg.norm_eps, chunk=0)
+        flash = layers.attention_train(p, x, cfg.attention, jnp.int32(w),
+                                       cfg.norm_eps, chunk=16)
+        np.testing.assert_allclose(np.asarray(naive), np.asarray(flash),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_grads_match():
+    from repro.models import layers
+    from repro.models.params import init_params
+
+    cfg = get_arch("tiny-gemma3")
+    defs = layers.attention_defs(cfg)
+    p = init_params(defs, jax.random.key(2), jnp.float32)
+    x = jax.random.normal(jax.random.key(3), (1, 32, cfg.d_model), jnp.float32)
+
+    def loss(p, chunk):
+        out = layers.attention_train(p, x, cfg.attention, jnp.int32(8),
+                                     cfg.norm_eps, chunk=chunk)
+        return jnp.sum(out**2)
+
+    g0 = jax.grad(lambda q: loss(q, 0))(p)
+    g1 = jax.grad(lambda q: loss(q, 8))(p)
+    for k in g0:
+        np.testing.assert_allclose(np.asarray(g0[k]), np.asarray(g1[k]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("name", ["tiny-gemma3", "tiny-mixtral"])
+def test_chunked_ce_matches_full(name):
+    cfg = dataclasses.replace(get_arch(name), param_dtype="float32",
+                              compute_dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.key(4), dtype=jnp.float32)
+    rng = np.random.default_rng(4)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 32)).astype(np.int32)),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 32)).astype(np.int32)),
+    }
+    full, _ = model.loss(params, batch)
+    chunked_cfg = dataclasses.replace(cfg, loss_chunk=8)
+    mc = Model(chunked_cfg)
+    chunked, _ = mc.loss(params, batch)
+    np.testing.assert_allclose(float(full), float(chunked), rtol=1e-5)
+
+
+def test_windowed_decode_matches_full_cache():
+    """Ring-buffer window caches == full caches, token by token."""
+    cfg = dataclasses.replace(get_arch("tiny-gemma3"), param_dtype="float32",
+                              compute_dtype="float32")
+    model_full = Model(cfg)
+    model_win = Model(dataclasses.replace(cfg, window_decode_cache=True))
+    params = model_full.init(jax.random.key(5), dtype=jnp.float32)
+    rng = np.random.default_rng(5)
+    B, T = 2, 24
+    toks = rng.integers(1, cfg.vocab_size, (B, T)).astype(np.int32)
+
+    cache_f = model_full.init_cache(B, T)
+    cache_w = model_win.init_cache(B, T)
+    for t in range(T):
+        pos = jnp.full((B,), t, jnp.int32)
+        tok = jnp.asarray(toks[:, t : t + 1])
+        lf, cache_f = model_full.decode_step(params, cache_f, tok, pos)
+        lw, cache_w = model_win.decode_step(params, cache_w, tok, pos)
+        np.testing.assert_allclose(
+            np.asarray(lf), np.asarray(lw), rtol=2e-4, atol=2e-4,
+            err_msg=f"divergence at t={t}",
+        )
+    # windowed cache really is smaller
+    sz = lambda c: sum(x.size for x in jax.tree.leaves(c))
+    assert sz(cache_w) < sz(cache_f)
+
+
+def test_windowed_decode_matches_forward_hymba():
+    """Hybrid arch (SWA + SSM states) with window caches vs teacher forcing."""
+    cfg = dataclasses.replace(get_arch("tiny-hymba"), param_dtype="float32",
+                              compute_dtype="float32",
+                              window_decode_cache=True)
+    model = Model(cfg)
+    params = model.init(jax.random.key(6), dtype=jnp.float32)
+    rng = np.random.default_rng(6)
+    B, T = 2, 12
+    toks = rng.integers(1, cfg.vocab_size, (B, T)).astype(np.int32)
+    full_logits = model.forward(params, tokens=jnp.asarray(toks))
+    cache = model.init_cache(B, T)
+    for t in range(T):
+        pos = jnp.full((B,), t, jnp.int32)
+        lg, cache = model.decode_step(params, cache, jnp.asarray(toks[:, t : t + 1]), pos)
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0]), np.asarray(full_logits[:, t]),
+            rtol=3e-3, atol=3e-3, err_msg=f"t={t}",
+        )

@@ -1,0 +1,135 @@
+"""Multi-device (8 fake CPU devices) correctness of the distributed pipelines.
+
+Runs in subprocesses because device count must be fixed before jax init.
+"""
+import pytest
+
+
+@pytest.mark.slow
+def test_scheme_8dev(run_multidev):
+    out = run_multidev(
+        """
+        import numpy as np
+        from repro.config import SAConfig
+        from repro.core.pipeline import build_suffix_array
+        from repro.core.oracle import naive_sa_reads, doubling_sa_text
+
+        rng = np.random.default_rng(1)
+        reads = rng.integers(1, 5, size=(101, 17)).astype(np.int32)
+        cfg = SAConfig(vocab_size=4, chars_per_word=2, key_words=2)
+        res = build_suffix_array(reads, cfg=cfg)
+        assert np.array_equal(res.suffix_array, naive_sa_reads(reads)), "reads"
+        assert res.stats["dropped"] == 0
+
+        text = rng.integers(1, 5, size=(1000,)).astype(np.int32)
+        cfg = SAConfig(vocab_size=4, chars_per_word=3, key_words=2)
+        res = build_suffix_array(text, cfg=cfg)
+        assert np.array_equal(res.suffix_array, doubling_sa_text(text)), "text"
+        print("OK")
+        """
+    )
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_scheme_8dev_adversarial(run_multidev):
+    out = run_multidev(
+        """
+        import numpy as np
+        from repro.config import SAConfig
+        from repro.core.pipeline import build_suffix_array
+        from repro.core.oracle import naive_sa_text, naive_sa_reads
+
+        cfg = SAConfig(vocab_size=4, chars_per_word=3, key_words=2)
+        text = np.tile(np.array([1, 2], np.int32), 150)
+        res = build_suffix_array(text, cfg=cfg)
+        assert np.array_equal(res.suffix_array, naive_sa_text(text)), "repeat"
+
+        rng = np.random.default_rng(2)
+        lens = rng.integers(0, 12, size=(37,)).astype(np.int32)
+        reads = np.zeros((37, 12), np.int32)
+        for i, n in enumerate(lens):
+            reads[i, :n] = rng.integers(1, 5, size=(n,))
+        cfg = SAConfig(vocab_size=4, chars_per_word=2, key_words=2)
+        res = build_suffix_array(reads, lengths=lens, cfg=cfg)
+        assert np.array_equal(res.suffix_array, naive_sa_reads(reads, lens)), "varlen"
+        print("OK")
+        """
+    )
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_terasort_and_doubling_8dev(run_multidev):
+    out = run_multidev(
+        """
+        import numpy as np
+        from repro.config import SAConfig
+        from repro.core.terasort import build_suffix_array_terasort
+        from repro.core.prefix_doubling import build_suffix_array_doubling
+        from repro.core.oracle import naive_sa_reads, doubling_sa_text, naive_sa_text
+
+        rng = np.random.default_rng(3)
+        reads = rng.integers(1, 5, size=(101, 17)).astype(np.int32)
+        cfg = SAConfig(vocab_size=4, chars_per_word=2, key_words=2)
+        res = build_suffix_array_terasort(reads, cfg=cfg)
+        assert np.array_equal(res.suffix_array, naive_sa_reads(reads)), "terasort"
+
+        cfg = SAConfig(vocab_size=4, chars_per_word=3, key_words=2)
+        text = rng.integers(1, 5, size=(1000,)).astype(np.int32)
+        res = build_suffix_array_doubling(text, cfg=cfg)
+        assert np.array_equal(res.suffix_array, doubling_sa_text(text)), "dbl rnd"
+        assert res.stats["dropped"] == 0
+
+        text = np.ones(257, np.int32)
+        res = build_suffix_array_doubling(text, cfg=cfg)
+        assert np.array_equal(res.suffix_array, naive_sa_text(text)), "dbl same"
+        print("OK")
+        """
+    )
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_store_primitives_8dev(run_multidev):
+    out = run_multidev(
+        """
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.core.store import StoreSpec, mget_scalar, scatter_update
+
+        mesh = Mesh(np.array(jax.devices()), ("sa",))
+        d, rows = 8, 16
+        spec = StoreSpec(axis="sa", num_shards=d, rows_per_shard=rows,
+                         row_len=1, request_capacity=8)
+
+        def f(vals, pos):
+            active = pos >= 0
+            got, dropped = mget_scalar(vals, pos, active, spec, fill=-1)
+            return got, dropped[None]
+
+        vals = np.arange(d * rows, dtype=np.int32)
+        rng = np.random.default_rng(0)
+        pos = rng.permutation(d * rows).astype(np.int32)
+        sm = jax.shard_map(f, mesh=mesh, in_specs=(P("sa"), P("sa")),
+                           out_specs=(P("sa"), P("sa")))
+        got, dropped = jax.jit(sm)(vals, pos)
+        assert np.array_equal(np.asarray(got), vals[pos]), "mget"
+        assert np.asarray(dropped).sum() == 0
+
+        def g(vals, pos, newv):
+            active = pos >= 0
+            out, dropped = scatter_update(vals, pos, newv, active, spec)
+            return out, dropped[None]
+
+        newv = (np.arange(d * rows) * 7 % 1000).astype(np.int32)
+        sm2 = jax.shard_map(g, mesh=mesh, in_specs=(P("sa"),) * 3,
+                            out_specs=(P("sa"), P("sa")))
+        out, dropped = jax.jit(sm2)(np.zeros(d * rows, np.int32), pos, newv)
+        expect = np.zeros(d * rows, np.int32)
+        expect[pos] = newv
+        assert np.array_equal(np.asarray(out), expect), "scatter"
+        print("OK")
+        """
+    )
+    assert "OK" in out

@@ -1,0 +1,175 @@
+"""System tests: the paper's scheme vs the exact oracle (single device)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import SAConfig
+from repro.core.oracle import (
+    doubling_sa_text,
+    lcp_kasai,
+    naive_sa_reads,
+    naive_sa_text,
+)
+from repro.core.pipeline import build_suffix_array
+from repro.core.prefix_doubling import build_suffix_array_doubling
+from repro.core.terasort import build_suffix_array_terasort
+
+CFG_DNA = SAConfig(vocab_size=4, chars_per_word=2, key_words=2)  # K=4: forces rounds
+
+
+def test_table1_sinica():
+    """Paper Table I: SA of SINICA$ (alphabet-mapped)."""
+    # A=1 C=2 I=3 N=4 S=5 ; $ is the implicit terminator
+    text = np.array([5, 3, 4, 3, 2, 1], np.int32)
+    res = build_suffix_array(text, cfg=SAConfig(vocab_size=5, chars_per_word=3))
+    np.testing.assert_array_equal(res.suffix_array, [5, 4, 3, 1, 2, 0])
+
+
+def test_reads_random_matches_oracle():
+    rng = np.random.default_rng(0)
+    reads = rng.integers(1, 5, size=(60, 15)).astype(np.int32)
+    res = build_suffix_array(reads, cfg=CFG_DNA)
+    np.testing.assert_array_equal(res.suffix_array, naive_sa_reads(reads))
+    assert res.stats["dropped"] == 0
+    assert res.stats["unresolved"] == 0
+
+
+def test_reads_variable_lengths():
+    rng = np.random.default_rng(1)
+    lens = rng.integers(0, 11, size=(25,)).astype(np.int32)
+    reads = np.zeros((25, 11), np.int32)
+    for i, n in enumerate(lens):
+        reads[i, :n] = rng.integers(1, 5, size=(n,))
+    res = build_suffix_array(reads, lengths=lens, cfg=CFG_DNA)
+    np.testing.assert_array_equal(res.suffix_array, naive_sa_reads(reads, lens))
+
+
+def test_reads_duplicates_stable_order():
+    rng = np.random.default_rng(2)
+    base = rng.integers(1, 5, size=(4, 9)).astype(np.int32)
+    reads = np.tile(base, (4, 1))
+    res = build_suffix_array(reads, cfg=CFG_DNA)
+    np.testing.assert_array_equal(res.suffix_array, naive_sa_reads(reads))
+
+
+def test_paired_end_two_files():
+    """Paper Case 6: pair-end = two input files, reads concatenated."""
+    rng = np.random.default_rng(3)
+    fwd = rng.integers(1, 5, size=(20, 12)).astype(np.int32)
+    rev = fwd[:, ::-1].copy()
+    both = np.concatenate([fwd, rev], axis=0)
+    res = build_suffix_array(both, cfg=CFG_DNA)
+    np.testing.assert_array_equal(res.suffix_array, naive_sa_reads(both))
+
+
+def test_text_mode_matches_oracle():
+    rng = np.random.default_rng(4)
+    text = rng.integers(1, 5, size=(300,)).astype(np.int32)
+    res = build_suffix_array(text, cfg=CFG_DNA)
+    np.testing.assert_array_equal(res.suffix_array, doubling_sa_text(text))
+
+
+def test_text_repetitive():
+    text = np.tile(np.array([1, 2, 1], np.int32), 40)
+    res = build_suffix_array(text, cfg=CFG_DNA)
+    np.testing.assert_array_equal(res.suffix_array, naive_sa_text(text))
+
+
+def test_paper_faithful_mode():
+    """base packing + raw-window responses + skip-exhausted (paper §IV)."""
+    rng = np.random.default_rng(5)
+    reads = rng.integers(1, 5, size=(40, 13)).astype(np.int32)
+    cfg = SAConfig(
+        vocab_size=4, chars_per_word=2, key_words=2,
+        packing="base", server_pack=False,
+    )
+    res = build_suffix_array(reads, cfg=cfg)
+    np.testing.assert_array_equal(res.suffix_array, naive_sa_reads(reads))
+    # paper-faithful responses ship raw windows: response bytes = K per request
+    assert res.footprint.fetch_response == res.stats["fetch_requests"] * 4
+
+
+def test_terasort_baseline_matches_oracle():
+    rng = np.random.default_rng(6)
+    reads = rng.integers(1, 5, size=(50, 14)).astype(np.int32)
+    res = build_suffix_array_terasort(reads, cfg=CFG_DNA)
+    np.testing.assert_array_equal(res.suffix_array, naive_sa_reads(reads))
+
+
+def test_scheme_shuffles_less_than_terasort():
+    """The paper's core claim: index-only shuffle << materialized shuffle."""
+    rng = np.random.default_rng(7)
+    reads = rng.integers(1, 5, size=(50, 30)).astype(np.int32)
+    cfg = SAConfig(vocab_size=4)
+    scheme = build_suffix_array(reads, cfg=cfg)
+    tera = build_suffix_array_terasort(reads, cfg=cfg)
+    np.testing.assert_array_equal(scheme.suffix_array, tera.suffix_array)
+    assert scheme.footprint.shuffle < tera.footprint.shuffle
+    # 16-byte records vs (L+1 + 8)-byte materialized suffixes
+    assert scheme.footprint.shuffle / tera.footprint.shuffle == pytest.approx(
+        16 / (31 + 8)
+    )
+    assert tera.footprint.materialized > 0 and scheme.footprint.materialized == 0
+
+
+def test_doubling_matches_oracle():
+    rng = np.random.default_rng(8)
+    text = rng.integers(1, 5, size=(400,)).astype(np.int32)
+    res = build_suffix_array_doubling(text, cfg=CFG_DNA)
+    np.testing.assert_array_equal(res.suffix_array, doubling_sa_text(text))
+
+
+def test_doubling_pathological_beats_scheme_rounds():
+    """Beyond-paper claim: O(log n) rounds vs O(LCP/K) on repetitive text."""
+    text = np.tile(np.array([1, 2], np.int32), 100)
+    cfg = SAConfig(vocab_size=4, chars_per_word=2, key_words=2)
+    scheme = build_suffix_array(text, cfg=cfg)
+    dbl = build_suffix_array_doubling(text, cfg=cfg)
+    np.testing.assert_array_equal(scheme.suffix_array, dbl.suffix_array)
+    assert dbl.stats["rounds"] < scheme.stats["rounds"]
+
+
+def test_lcp_kasai_matches_naive():
+    rng = np.random.default_rng(9)
+    text = rng.integers(1, 5, size=(120,)).astype(np.int32)
+    sa = naive_sa_text(text)
+    lcp = lcp_kasai(text, sa)
+    for i in range(1, len(sa)):
+        a, b = text[sa[i - 1] :], text[sa[i] :]
+        m = 0
+        while m < min(len(a), len(b)) and a[m] == b[m]:
+            m += 1
+        assert lcp[i] == m
+
+
+# ---------------------------------------------------------------------------
+# property tests
+# ---------------------------------------------------------------------------
+
+
+@given(
+    data=st.lists(st.integers(1, 4), min_size=2, max_size=120),
+)
+@settings(max_examples=20, deadline=None)
+def test_property_text_sa_is_sorted_permutation(data):
+    text = np.array(data, np.int32)
+    res = build_suffix_array(text, cfg=CFG_DNA)
+    sa = res.suffix_array
+    # permutation of all positions
+    assert sorted(sa.tolist()) == list(range(len(text)))
+    # suffixes actually sorted
+    for i in range(1, len(sa)):
+        assert tuple(text[sa[i - 1] :]) <= tuple(text[sa[i] :])
+
+
+@given(
+    r=st.integers(1, 12),
+    l=st.integers(1, 10),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=15, deadline=None)
+def test_property_reads_sa_matches_oracle(r, l, seed):
+    rng = np.random.default_rng(seed)
+    reads = rng.integers(1, 5, size=(r, l)).astype(np.int32)
+    res = build_suffix_array(reads, cfg=CFG_DNA)
+    np.testing.assert_array_equal(res.suffix_array, naive_sa_reads(reads))

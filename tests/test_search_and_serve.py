@@ -1,0 +1,106 @@
+"""SA pattern search (the index's consumer side) + continuous-batching engine."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SAConfig, get_arch
+from repro.core.pipeline import build_suffix_array
+from repro.core.search import align_reads, count_occurrences, find_occurrences
+from repro.models.model import Model
+from repro.serve.engine import Request, ServeEngine
+
+
+def test_search_text_counts_match_bruteforce():
+    rng = np.random.default_rng(0)
+    text = rng.integers(1, 4, size=(400,)).astype(np.int32)
+    res = build_suffix_array(text, cfg=SAConfig(vocab_size=3))
+    sa = res.suffix_array
+    for plen in (1, 2, 3, 5):
+        for _ in range(5):
+            start = int(rng.integers(0, len(text) - plen))
+            pat = text[start : start + plen]
+            got = find_occurrences(text, sa, pat)
+            want = [
+                i for i in range(len(text))
+                if np.array_equal(text[i : i + plen], pat)
+                and i + plen <= len(text)
+            ]
+            assert got == want, (pat, got[:5], want[:5])
+            assert count_occurrences(text, sa, pat) == len(want)
+
+
+def test_search_absent_pattern():
+    text = np.ones(50, np.int32)  # all 1s
+    res = build_suffix_array(text, cfg=SAConfig(vocab_size=3))
+    assert count_occurrences(text, res.suffix_array, [2, 1]) == 0
+    assert count_occurrences(text, res.suffix_array, [1, 1]) == 49
+
+
+def test_align_reads_seed_lookup():
+    """The paper's application: find every (read, offset) matching a seed."""
+    rng = np.random.default_rng(1)
+    reads = rng.integers(1, 5, size=(40, 20)).astype(np.int32)
+    res = build_suffix_array(reads, cfg=SAConfig(vocab_size=4))
+    import math
+
+    sb = int(math.ceil(math.log2(reads.shape[1] + 1)))
+    seed = reads[7, 3:9]
+    got = align_reads(reads, res.suffix_array, sb, seed)
+    want = sorted(
+        (r, o)
+        for r in range(reads.shape[0])
+        for o in range(reads.shape[1] - len(seed) + 1)
+        if np.array_equal(reads[r, o : o + len(seed)], seed)
+    )
+    assert got == want
+    assert (7, 3) in got
+
+
+def test_serve_engine_continuous_batching():
+    cfg = get_arch("tiny-gemma3")
+    model = Model(cfg)
+    params = model.init(jax.random.key(0), dtype=jnp.float32)
+    engine = ServeEngine(model, params, batch_slots=2, max_seq=64)
+
+    rng = np.random.default_rng(2)
+    reqs = [
+        Request(rid=i, prompt=rng.integers(1, cfg.vocab_size, size=(n,)).tolist(),
+                max_new=6)
+        for i, n in enumerate([3, 5, 4, 2, 6])  # more requests than slots
+    ]
+    for r in reqs:
+        engine.submit(r)
+    for _ in range(400):
+        if engine.step() == 0 and not engine.queue:
+            break
+    assert all(r.done for r in reqs)
+    assert all(len(r.generated) == 6 for r in reqs)
+
+    # slot-scheduled generation must equal teacher-forced forward per request
+    r0 = reqs[0]
+    full = np.array(r0.prompt + r0.generated, np.int32)[None]
+    logits = model.forward(params, tokens=jnp.asarray(full))
+    am = np.asarray(jnp.argmax(logits[0], -1))
+    want = [int(am[len(r0.prompt) - 1 + t]) for t in range(r0.max_new)]
+    assert r0.generated == want
+
+
+def test_serve_engine_eos_stops_early():
+    cfg = get_arch("tiny-gemma3")
+    model = Model(cfg)
+    params = model.init(jax.random.key(1), dtype=jnp.float32)
+    # find which token the model emits first, then use it as EOS
+    probe = Request(rid=0, prompt=[5, 9], max_new=1)
+    e1 = ServeEngine(model, params, batch_slots=1, max_seq=32)
+    e1.submit(probe)
+    while e1.step() or e1.queue:
+        pass
+    eos = probe.generated[0]
+    r = Request(rid=1, prompt=[5, 9], max_new=10)
+    e2 = ServeEngine(model, params, batch_slots=1, max_seq=32, eos_id=eos)
+    e2.submit(r)
+    while e2.step() or e2.queue:
+        pass
+    assert r.done and r.generated[-1] == eos and len(r.generated) < 10
