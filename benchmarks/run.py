@@ -20,6 +20,8 @@ def main() -> None:
         "pathological": scaling.run_pathological,  # §III GC anecdote / Fig 7
         "partition": partition.run,          # §IV-A sampling partitioner
         "throughput": throughput.run,        # §IV-D breakdown + variants
+        # out-of-core superblock smoke (exercised, not timed, under CI)
+        "superblock": scaling.run_out_of_core,
     }
     pick = sys.argv[1:] or list(sections)
     t0 = time.time()

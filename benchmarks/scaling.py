@@ -12,9 +12,10 @@ import time
 
 import numpy as np
 
-from repro.config import SAConfig
+from repro.config import SAConfig, SuperblockConfig
 from repro.core.pipeline import build_suffix_array
 from repro.core.prefix_doubling import build_suffix_array_doubling
+from repro.core.superblock import build_suffix_array_superblock
 from repro.core.terasort import build_suffix_array_terasort
 from repro.data.corpus import synth_dna_reads, synth_token_corpus
 
@@ -63,6 +64,46 @@ def run_pathological(reps=(50, 100, 200), csv=True):
     return rows
 
 
+def run_out_of_core(sizes=(200, 400), read_len=24, superblocks=4, csv=True):
+    """Out-of-core smoke/footprint: the same corpus built single-pass vs
+    split into superblocks.  The point is the *peak per-run record footprint*
+    column — bounded by one superblock for the out-of-core build while the
+    single-pass run must hold every record at once (the paper's
+    bounded-by-store-capacity claim, beyond one run's memory)."""
+    cfg = SAConfig(vocab_size=4, packing="base")
+    sb = SuperblockConfig(num_superblocks=superblocks)
+    rows = []
+    for n in sizes:
+        reads = synth_dna_reads(n, read_len, seed=n)
+        t0 = time.perf_counter()
+        single = build_suffix_array(reads, cfg=cfg)
+        t_single = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        ooc = build_suffix_array_superblock(reads, cfg=cfg, sb=sb)
+        t_ooc = time.perf_counter() - t0
+        assert np.array_equal(single.suffix_array, ooc.suffix_array)
+        total = single.stats["num_suffixes"]
+        rows.append(dict(
+            reads=n,
+            total_records=total,
+            single_peak=total,  # one run holds every record
+            ooc_peak=ooc.footprint.peak_records,
+            ooc_superblocks=ooc.footprint.superblocks,
+            single_s=t_single, ooc_s=t_ooc,
+            ooc_merge_bytes=ooc.stats["merge_fetch_bytes"],
+        ))
+    if csv:
+        print("# out-of-core superblock build — peak per-run records vs single-pass")
+        print("reads,total_records,single_peak,ooc_peak,ooc_superblocks,"
+              "single_s,ooc_s,ooc_merge_bytes")
+        for r in rows:
+            print(f"{r['reads']},{r['total_records']},{r['single_peak']},"
+                  f"{r['ooc_peak']},{r['ooc_superblocks']},"
+                  f"{r['single_s']:.2f},{r['ooc_s']:.2f},{r['ooc_merge_bytes']}")
+    return rows
+
+
 if __name__ == "__main__":
     run()
     run_pathological()
+    run_out_of_core()

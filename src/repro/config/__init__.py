@@ -12,6 +12,7 @@ from repro.config.base import (
     ShapeConfig,
     ShardingPolicy,
     SSMConfig,
+    SuperblockConfig,
     TrainConfig,
     LM_SHAPES,
 )
@@ -27,6 +28,7 @@ __all__ = [
     "ShapeConfig",
     "ShardingPolicy",
     "SSMConfig",
+    "SuperblockConfig",
     "TrainConfig",
     "LM_SHAPES",
     "get_arch",

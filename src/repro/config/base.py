@@ -307,6 +307,33 @@ class SAConfig:
         return self.resolved_chars_per_word() * self.key_words
 
 
+@dataclass(frozen=True)
+class SuperblockConfig:
+    """Out-of-core superblock construction (``repro.core.superblock``).
+
+    A corpus whose suffix-record set exceeds what one ``shard_map`` run can
+    hold is split into S *superblocks*.  Each superblock runs the ordinary
+    pipeline (one run's records = one superblock's records), then the merge
+    ranks all suffixes against sampled splitter suffixes with batched window
+    fetches from the resident store — indexes move, tokens stay put — so no
+    run ever materializes more than one superblock of 16-byte records.
+
+    ``max_records_per_run``: capacity of a single pipeline run in suffix
+      records.  0 = derive from ``num_superblocks`` (or stay in-core).
+    ``num_superblocks``: explicit block-count override.  0 = derive from
+      ``max_records_per_run``; both 0 = single-pass (in-core).
+    ``samples_per_block``: splitter samples taken from each superblock's
+      local SA (clamped so the pooled sample also fits one superblock).
+    ``request_capacity``: merge-time store fetch batch size (requests per
+      round; overflowing tie groups retry group-synchronously).
+    """
+
+    max_records_per_run: int = 0
+    num_superblocks: int = 0
+    samples_per_block: int = 32
+    request_capacity: int = 4096
+
+
 # ---------------------------------------------------------------------------
 # helpers
 # ---------------------------------------------------------------------------

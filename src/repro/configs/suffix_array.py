@@ -2,10 +2,14 @@
 construction over the grouper-genome-scale read set (paper §I: 64 GB input,
 325,718,730 reads x ~200 bp -> ~6.7 TB of suffixes).
 
-Used by ``repro.launch.sa_build`` and the SA-pipeline dry-run."""
+Used by ``repro.launch.sa_build`` and the SA-pipeline dry-run.  Workloads may
+carry a :class:`SuperblockConfig`; the launcher then routes through the
+out-of-core superblock builder (``repro.core.superblock``) whenever the
+record set exceeds one run's capacity."""
 from dataclasses import dataclass
+from typing import Optional
 
-from repro.config.base import SAConfig
+from repro.config.base import SAConfig, SuperblockConfig
 
 
 @dataclass(frozen=True)
@@ -14,6 +18,7 @@ class SAWorkload:
     num_reads: int
     read_len: int
     sa: SAConfig
+    superblock: Optional[SuperblockConfig] = None
 
 
 def grouper_genome() -> SAWorkload:
@@ -33,4 +38,17 @@ def grouper_small() -> SAWorkload:
         num_reads=2_000,
         read_len=64,
         sa=SAConfig(vocab_size=4, packing="base", samples_per_shard=256),
+    )
+
+
+def grouper_out_of_core() -> SAWorkload:
+    """CPU-runnable out-of-core exercise: the same distribution with a
+    per-run record budget that forces >= 4 superblocks, so the build goes
+    through partition -> per-block pipeline -> store-mediated merge."""
+    return SAWorkload(
+        name="grouper-out-of-core",
+        num_reads=800,
+        read_len=48,
+        sa=SAConfig(vocab_size=4, packing="base", samples_per_shard=256),
+        superblock=SuperblockConfig(max_records_per_run=10_000),
     )

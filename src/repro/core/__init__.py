@@ -2,5 +2,18 @@
 construction with an in-memory data store (see DESIGN.md)."""
 from repro.core.types import Footprint, SAResult, KEY_SENTINEL
 from repro.core.pipeline import build_suffix_array
+from repro.core.superblock import (
+    build_suffix_array_auto,
+    build_suffix_array_superblock,
+    plan_superblocks,
+)
 
-__all__ = ["Footprint", "SAResult", "KEY_SENTINEL", "build_suffix_array"]
+__all__ = [
+    "Footprint",
+    "SAResult",
+    "KEY_SENTINEL",
+    "build_suffix_array",
+    "build_suffix_array_auto",
+    "build_suffix_array_superblock",
+    "plan_superblocks",
+]

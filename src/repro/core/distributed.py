@@ -18,7 +18,11 @@ from repro.core.types import KEY_SENTINEL
 
 
 def axis_size(axis: str) -> int:
-    return lax.axis_size(axis)
+    """Static size of a mapped axis (portable across jax versions)."""
+    try:
+        return lax.axis_size(axis)
+    except AttributeError:  # pre-0.5 jax: psum of a literal folds statically
+        return lax.psum(1, axis)
 
 
 def pvary(x, axis: str):
@@ -26,7 +30,38 @@ def pvary(x, axis: str):
     try:
         return lax.pcast(x, (axis,), to="varying")
     except (AttributeError, TypeError):  # older jax
+        pass
+    try:
         return lax.pvary(x, (axis,))
+    except (AttributeError, TypeError):
+        return x  # pre-0.5 jax: no varying/replicated type distinction
+
+
+def shard_map(fn, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` across jax versions.
+
+    Newer jax exposes it at top level with ``check_vma``; older releases have
+    ``jax.experimental.shard_map.shard_map`` with the ``check_rep`` spelling.
+    """
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(
+                fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_vma=check_vma,
+            )
+        except TypeError:
+            return jax.shard_map(
+                fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_rep=check_vma,
+            )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    # The legacy check_rep checker predates replication rules for while/scan
+    # (which the pipelines rely on), so it must stay off here; the modern
+    # check_vma path above provides the real check.
+    return _shard_map(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False,
+    )
 
 
 def bucket_scatter(
@@ -91,7 +126,7 @@ def sample_splitters(
     Systematic per-shard sampling -> all_gather -> sort -> quantiles.
     Returns (split_hi, split_lo) of length D-1, identical on every device.
     """
-    d = lax.axis_size(axis)
+    d = axis_size(axis)
     n = key_hi.shape[0]
     # even systematic sampling (no end-of-array duplication when s > n)
     idx = ((jnp.arange(num_samples) * n) // num_samples).astype(jnp.int32)
@@ -107,7 +142,7 @@ def sample_splitters(
 
 def global_exclusive_offsets(count: jnp.ndarray, axis: str) -> jnp.ndarray:
     """Exclusive prefix sum of a per-device scalar across the axis."""
-    d = lax.axis_size(axis)
+    d = axis_size(axis)
     me = lax.axis_index(axis)
     counts = lax.all_gather(count, axis)  # (D,)
     mask = jnp.arange(d) < me
@@ -119,7 +154,7 @@ def neighbor_shift_right(x: jnp.ndarray, axis: str, fill) -> jnp.ndarray:
 
     Used to detect equal-key runs spanning device boundaries.
     """
-    d = lax.axis_size(axis)
+    d = axis_size(axis)
     perm = [(i, i + 1) for i in range(d - 1)]
     shifted = lax.ppermute(x, axis, perm)
     me = lax.axis_index(axis)

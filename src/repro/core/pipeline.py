@@ -37,12 +37,14 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.config import SAConfig
 from repro.core import encoding
 from repro.core.distributed import (
+    axis_size,
     bucket_scatter,
     pvary,
     exchange,
     lex_bucket,
     run_starts,
     sample_splitters,
+    shard_map,
 )
 from repro.core.store import StoreSpec, mget_window, token_bytes
 from repro.core.types import (
@@ -104,7 +106,7 @@ def _map_phase(reads_l, lengths_l, halo_l, *, cfg, rows_per_shard, stride_bits,
     s_hi, s_lo = sample_splitters(rec[:, 0], rec[:, 1], cfg.samples_per_shard, AXIS)
     bucket = lex_bucket(rec[:, 0], rec[:, 1], s_hi, s_lo)
     # invalid padding records go to a local dump bucket, never shipped
-    nb = lax.axis_size(AXIS)
+    nb = axis_size(AXIS)
     bucket = jnp.where(valid0.reshape(-1), bucket, jnp.int32(nb))
     return rec, valid0, bucket
 
@@ -397,7 +399,7 @@ def make_pipeline(corpus_shape, cfg: SAConfig, mesh: Mesh, lengths=None,
         text_mode=info["text_mode"],
         text_len=info["text_len"],
     )
-    smapped = jax.shard_map(
+    smapped = shard_map(
         fn, mesh=mesh, in_specs=(P(AXIS), P(AXIS), P(AXIS)),
         out_specs=(P(AXIS), P(AXIS), P(AXIS)),
         # interpret-mode Pallas mixes varying/unvarying internals; relax the
@@ -419,7 +421,7 @@ def _exact_shuffle_cap(corpus_shape, cfg, mesh, data, lens, halo, info) -> int:
         text_mode=info["text_mode"],
         text_len=info["text_len"],
     )
-    smapped = jax.shard_map(
+    smapped = shard_map(
         fn, mesh=mesh, in_specs=(P(AXIS), P(AXIS), P(AXIS)), out_specs=P(AXIS),
         check_vma=not cfg.use_pallas,
     )

@@ -36,6 +36,7 @@ from repro.core.distributed import (
     lex_bucket,
     run_starts,
     sample_splitters,
+    shard_map,
 )
 from repro.core.pipeline import AXIS, _flat_mesh, _shard_inputs, plan
 from repro.core.store import StoreSpec, mget_scalar, scatter_update, token_bytes
@@ -249,7 +250,7 @@ def build_suffix_array_doubling(
             rows_per_shard=info["rows_per_shard"], shuffle_cap=shuffle_cap,
             fetch_cap=fetch_cap, text_len=n, max_rounds=max_rounds,
         )
-        smapped = jax.shard_map(
+        smapped = shard_map(
             fn, mesh=mesh, in_specs=(P(AXIS), P(AXIS), P(AXIS)),
             out_specs=(P(AXIS), P(AXIS)),
         )

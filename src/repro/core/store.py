@@ -16,10 +16,12 @@ All methods are *per-device* functions meant to be called inside ``shard_map``.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Optional, Tuple
 
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.config import SAConfig
@@ -228,3 +230,123 @@ def scatter_update(
     padded = jnp.concatenate([local_vals, jnp.zeros((1,), local_vals.dtype)])
     padded = padded.at[lp_c].set(jnp.where(ok, recv[:, 1], padded[lp_c]))
     return padded[: spec.rows_per_shard], dropped
+
+
+# ---------------------------------------------------------------------------
+# Cross-superblock store (out-of-core merge path, core/superblock.py)
+# ---------------------------------------------------------------------------
+
+
+class CorpusStore:
+    """Resident-corpus window server for cross-superblock fetches.
+
+    During the out-of-core merge (``repro.core.superblock``) a run only holds
+    one superblock of 16-byte records; comparisons against suffixes of *other*
+    superblocks are answered by this store — the same "raw data stays put,
+    indexes move" discipline as :func:`mget_window`, host-resident instead of
+    HBM-resident.  The capacity/retry semantics mirror the device path:
+
+    * at most ``request_capacity`` requests are served per call;
+    * :meth:`mget_window_host` serves **whole tie groups** in order (an
+      oversized leading group is served alone so rounds always progress) and
+      reports unserved actives for the caller's group-synchronous retry;
+    * byte accounting matches :class:`FetchStats` (8 B per index request,
+      ``K * token_bytes`` per raw-window response).
+    """
+
+    def __init__(self, corpus, cfg: SAConfig, request_capacity: int = 4096):
+        corpus = np.asarray(corpus, np.int32)
+        self.text_mode = corpus.ndim == 1
+        self.k = cfg.prefix_len
+        self.request_capacity = max(1, int(request_capacity))
+        self.token_bytes = token_bytes(cfg.vocab_size)
+        if self.text_mode:
+            self.n = corpus.shape[0]
+            self.stride_bits = 0
+            self.max_len = self.n
+            self._flat = np.concatenate([corpus, np.zeros(self.k, np.int32)])
+        else:
+            r, l = corpus.shape
+            self.n = r
+            self.stride_bits = int(math.ceil(math.log2(l + 1)))
+            self.max_len = l + 1
+            self._rows = np.pad(corpus, ((0, 0), (0, self.k)))
+        # fetch accounting (read by the superblock merge's Footprint)
+        self.requests = 0
+        self.request_bytes = 0
+        self.response_bytes = 0
+        self.retries = 0
+        self.rounds = 0
+        self.peak_windows = 0
+
+    # -- raw gather ---------------------------------------------------------
+    def _gather(self, gidx: np.ndarray, depth: np.ndarray) -> np.ndarray:
+        """(m,) int64 global suffix ids -> (m, K) windows at token offset
+        ``depth * K`` into each suffix (0-padded past the end)."""
+        if self.text_mode:
+            pos = np.minimum(gidx + depth * self.k, self.n)
+            cols = pos[:, None] + np.arange(self.k)[None, :]
+            return self._flat[np.minimum(cols, self.n + self.k - 1)]
+        row = (gidx >> self.stride_bits).astype(np.int64)
+        off = (gidx & ((1 << self.stride_bits) - 1)).astype(np.int64)
+        off = np.minimum(off + depth * self.k, self.max_len - 1)
+        cols = off[:, None] + np.arange(self.k)[None, :]
+        return self._rows[row[:, None], cols]
+
+    # -- batched fetch APIs -------------------------------------------------
+    def fetch_windows(self, gidx: np.ndarray, depth) -> np.ndarray:
+        """Fetch windows for every request (internally split into
+        capacity-sized service rounds; no retry semantics needed)."""
+        m = gidx.shape[0]
+        depth = np.broadcast_to(np.asarray(depth, np.int64), (m,))
+        out = np.zeros((m, self.k), np.int32)
+        for lo in range(0, m, self.request_capacity):
+            hi = min(lo + self.request_capacity, m)
+            out[lo:hi] = self._gather(gidx[lo:hi], depth[lo:hi])
+            self.rounds += 1
+            self.requests += hi - lo
+            self.request_bytes += (hi - lo) * 8
+            self.response_bytes += (hi - lo) * self.k * self.token_bytes
+        self.peak_windows = max(self.peak_windows, m)
+        return out
+
+    def mget_window_host(
+        self,
+        gidx: np.ndarray,
+        depth: np.ndarray,
+        active: np.ndarray,
+        group: np.ndarray,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """One capacity-bounded service round over active tie groups.
+
+        Serves whole groups, in order, until ``request_capacity`` requests are
+        placed; a leading group larger than the capacity is served alone
+        (burst) so progress is guaranteed.  Returns ``(windows, ok)`` where
+        unserved slots have ``ok == False`` and zero windows — the caller must
+        not advance any group with an unserved active member (the same
+        group-synchronous rule as the device pipeline).
+        """
+        m = gidx.shape[0]
+        win = np.zeros((m, self.k), np.int32)
+        ok = np.zeros(m, bool)
+        act = np.flatnonzero(active)
+        self.rounds += 1
+        if act.size == 0:
+            return win, ok
+        ag = group[act]
+        new_grp = np.concatenate([[True], ag[1:] != ag[:-1]])
+        grp_id = np.cumsum(new_grp) - 1
+        # request count through the end of each group
+        end_count = np.zeros(grp_id[-1] + 1, np.int64)
+        np.maximum.at(end_count, grp_id, np.arange(1, act.size + 1))
+        fits = end_count <= self.request_capacity
+        fits[0] = True  # oversized leading group: serve alone
+        served = act[fits[grp_id]]
+        win[served] = self._gather(gidx[served], depth[served])
+        ok[served] = True
+        self.requests += served.size
+        self.request_bytes += served.size * 8
+        self.response_bytes += served.size * self.k * self.token_bytes
+        self.retries += act.size - served.size
+        self.peak_windows = max(self.peak_windows, served.size)
+        return win, ok

@@ -1,0 +1,363 @@
+"""Out-of-core suffix-array construction via superblocks.
+
+The paper's headline result is *scale*: 6.7 TB of suffixes on a 16-node
+cluster, with only indexes in flight while the raw data stays resident in the
+in-memory store (§IV-V).  The single-pass pipeline (``core/pipeline.py``)
+requires every 16-byte suffix record of the corpus to fit one ``shard_map``
+run; this module removes that ceiling by the standard block-wise route of the
+distributed-SA literature (Haag/Kurpicz/Sanders/Schimek '24, Bingmann/Gog/
+Kurpicz '16): partition, solve blocks with the existing machinery, merge.
+
+Phases (see :func:`build_suffix_array_superblock`):
+
+1. **Partition** — the corpus is split into S contiguous superblocks such
+   that each block's record set fits one run (:func:`plan_superblocks`).
+2. **Local SAs** — every superblock runs the ordinary distributed pipeline.
+   Reads mode: block-local SAs are exact (suffixes never cross a read).
+   Text mode: they are *provisional* near the block tail (a comparison may
+   depend on tokens past the block boundary) — which is why phase 3 ranks
+   against the resident corpus rather than trusting block order blindly.
+3. **Merge via the store** — splitter suffixes are sampled from the
+   concatenated block SAs (evenly spaced picks over each block's sorted run
+   = per-block quantiles), ranked exactly, and every suffix is assigned a
+   merge bucket by batched window comparisons against the splitters served
+   from the resident :class:`~repro.core.store.CorpusStore` — *indexes move,
+   tokens stay put*.  Oversized buckets are split recursively (splitters are
+   member suffixes, so every split makes progress), guaranteeing that no
+   bucket — and therefore no run — materializes more than one superblock of
+   records.  Each bucket is then ranked by the same group-synchronous
+   window-refinement loop as the device reducer, and buckets concatenate
+   into the final SA.
+
+The peak number of records any single run held is reported in
+``Footprint.peak_records`` and is bounded by ``plan.capacity_records`` — the
+"bounded by store capacity, not by HBM" property the paper claims.
+"""
+from __future__ import annotations
+
+import math
+import warnings
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.config import SAConfig, SuperblockConfig
+from repro.core.pipeline import build_suffix_array
+from repro.core.store import CorpusStore
+from repro.core.types import Footprint, SAResult
+
+
+@dataclass(frozen=True)
+class SuperblockPlan:
+    """Static partition of a corpus into superblocks."""
+
+    text_mode: bool
+    total_records: int
+    num_superblocks: int
+    capacity_records: int  # record bound for any single run / merge bucket
+    blocks: Tuple[Tuple[int, int], ...]  # [lo, hi) token / row ranges
+    stride_bits: int
+
+
+def plan_superblocks(
+    corpus_shape, cfg: SAConfig, sb: SuperblockConfig
+) -> SuperblockPlan:
+    """Derive the superblock split from the capacity knobs.
+
+    ``num_superblocks`` wins if set; otherwise ``max_records_per_run``
+    determines the smallest S whose blocks fit; both unset => S = 1
+    (single-pass, in-core).
+
+    Granularity floor: a block is at least one item (one read / one token),
+    so in reads mode ``capacity_records`` can never go below ``L + 1``
+    records.  A budget below that floor is unachievable and triggers a
+    warning — ``Footprint.peak_records`` stays bounded by
+    ``capacity_records``, not by the raw knob.
+    """
+    text_mode = len(corpus_shape) == 1
+    if text_mode:
+        items, per_item = corpus_shape[0], 1
+        stride_bits = 0
+    else:
+        r, l = corpus_shape
+        items, per_item = r, l + 1
+        stride_bits = int(math.ceil(math.log2(l + 1)))
+    total = items * per_item
+    if sb.num_superblocks > 0:
+        s = sb.num_superblocks
+    elif sb.max_records_per_run > 0:
+        # derive from whole items per block (a read's records are atomic):
+        # ceil(total/budget) alone can overshoot the budget after rounding
+        # items up, so size blocks by how many items actually fit.
+        items_fit = sb.max_records_per_run // per_item
+        s = -(-items // items_fit) if items_fit >= 1 else items
+    else:
+        s = 1
+    s = max(1, min(s, items))
+    per_block = -(-items // s)
+    blocks = tuple(
+        (lo, min(lo + per_block, items))
+        for lo in range(0, items, per_block)
+    )
+    if 0 < sb.max_records_per_run < per_block * per_item:
+        warnings.warn(
+            f"max_records_per_run={sb.max_records_per_run} is below the "
+            f"granularity floor ({per_block * per_item} records per block); "
+            "peak per-run records will exceed the requested budget",
+            stacklevel=2,
+        )
+    return SuperblockPlan(
+        text_mode=text_mode,
+        total_records=total,
+        num_superblocks=len(blocks),
+        capacity_records=per_block * per_item,
+        blocks=blocks,
+        stride_bits=stride_bits,
+    )
+
+
+# ---------------------------------------------------------------------------
+# exact suffix comparisons against the resident store
+# ---------------------------------------------------------------------------
+
+
+def _run_starts_np(eq_prev: np.ndarray) -> np.ndarray:
+    idx = np.arange(eq_prev.shape[0], dtype=np.int64)
+    return np.maximum.accumulate(np.where(eq_prev, -1, idx))
+
+
+def _tied_np(g: np.ndarray) -> np.ndarray:
+    prev = np.concatenate([[-1], g[:-1]])
+    nxt = np.concatenate([g[1:], [-2]])
+    return (g == prev) | (g == nxt)
+
+
+def _refine_sort(store: CorpusStore, gidx: np.ndarray) -> np.ndarray:
+    """Rank ``gidx`` by exact suffix order with batched store fetches.
+
+    The host port of the device reducer: sort by the first K-token window,
+    then refine still-tied groups one window at a time.  Zero-padding past a
+    suffix end orders shorter suffixes first, and the global index is the
+    final sort key — exactly the oracle's ``(suffix tokens..., index)``
+    order.  Capacity overflow retries are group-synchronous: a tie group
+    advances a window only when every active member was served.
+    """
+    m = gidx.shape[0]
+    if m <= 1:
+        return gidx
+    k = store.k
+    win = store.fetch_windows(gidx, 0)
+    order = np.lexsort((gidx,) + tuple(win[:, j] for j in range(k - 1, -1, -1)))
+    gidx, win = gidx[order], win[order]
+    eq = np.concatenate([[False], (win[1:] == win[:-1]).all(axis=1)])
+    g = _run_starts_np(eq)
+    exhausted = (win == 0).any(axis=1)
+    depth = np.ones(m, np.int64)
+    # Runaway guard only: every round serves at least the leading tie group
+    # (mget_window_host's burst rule), so sum(depth) grows every iteration
+    # and m * max-window-depth rounds is a true upper bound even when small
+    # request capacities force groups to take turns.
+    hard_cap = m * (-(-store.max_len // k) + 2) + 8
+    for _ in range(hard_cap):
+        tied = _tied_np(g)
+        active = tied & ~exhausted
+        if not active.any():
+            break
+        win, ok = store.mget_window_host(gidx, depth, active, g)
+        # group-synchronous advance (mirrors the device while-loop body)
+        member_ok = np.where(active, ok, True)
+        starts = np.concatenate([[True], g[1:] != g[:-1]])
+        seg_ok = np.logical_and.reduceat(member_ok, np.flatnonzero(starts))
+        adv = seg_ok[np.cumsum(starts) - 1] & active
+        nk = np.where(adv[:, None], win, 0).astype(np.int32)
+        exhausted = np.where(adv, (win == 0).any(axis=1), exhausted)
+        depth = np.where(adv, depth + 1, depth)
+        order = np.lexsort(
+            (gidx,) + tuple(nk[:, j] for j in range(k - 1, -1, -1)) + (g,)
+        )
+        g, nk = g[order], nk[order]
+        gidx, exhausted, depth = gidx[order], exhausted[order], depth[order]
+        eq = np.concatenate(
+            [[False], (g[1:] == g[:-1]) & (nk[1:] == nk[:-1]).all(axis=1)]
+        )
+        g = _run_starts_np(eq)
+    else:
+        raise RuntimeError("superblock merge refinement did not converge")
+    return gidx
+
+
+def _less_than(store: CorpusStore, gidx: np.ndarray, pivot: int) -> np.ndarray:
+    """Exact ``suffix(gidx) < suffix(pivot)`` for a batch, ties by index.
+
+    Progressive window comparison; fetched windows for at most one
+    capacity-chunk of suffixes are alive at any moment.
+    """
+    out = np.zeros(gidx.shape[0], bool)
+    cap = store.request_capacity
+    for clo in range(0, gidx.shape[0], cap):
+        chunk = gidx[clo : clo + cap]
+        res = np.zeros(chunk.shape[0], bool)
+        undecided = np.ones(chunk.shape[0], bool)
+        depth = 0
+        while undecided.any():
+            wp = store.fetch_windows(np.array([pivot], np.int64), depth)[0]
+            sel = np.flatnonzero(undecided)
+            ws = store.fetch_windows(chunk[sel], depth)
+            neq = ws != wp[None, :]
+            anyneq = neq.any(axis=1)
+            first = np.argmax(neq, axis=1)
+            less = ws[np.arange(sel.size), first] < wp[first]
+            res[sel[anyneq]] = less[anyneq]
+            undecided[sel[anyneq]] = False
+            if (wp == 0).any():
+                # equal windows incl. padding => both suffixes ended: the
+                # contents are equal and the index breaks the tie.
+                eq_sel = sel[~anyneq]
+                res[eq_sel] = chunk[eq_sel] < pivot
+                undecided[eq_sel] = False
+            depth += 1
+            assert depth <= store.max_len // store.k + 2, "comparison overran"
+        out[clo : clo + cap] = res
+    return out
+
+
+def _partition(
+    store: CorpusStore, gidx: np.ndarray, splitters: np.ndarray
+) -> List[np.ndarray]:
+    """Split ``gidx`` into true-order intervals at the splitter suffixes."""
+    bucket = np.zeros(gidx.shape[0], np.int64)
+    for pivot in splitters:
+        bucket += ~_less_than(store, gidx, int(pivot))
+    return [gidx[bucket == b] for b in range(splitters.size + 1)]
+
+
+def _sorted_runs(
+    store: CorpusStore, gidx: np.ndarray, cap: int, samples_per_split: int
+) -> List[np.ndarray]:
+    """Fully sort an interval of the true order, in pieces of <= cap records.
+
+    Splitters are member suffixes at sample quantiles, so each part strictly
+    shrinks and recursion terminates even on all-equal-content inputs (the
+    index tiebreak makes the order strict).
+    """
+    if gidx.size <= cap:
+        return [_refine_sort(store, gidx)]
+    nb = -(-gidx.size // cap) + 1
+    # the sample pool is itself a run: keep it within the record bound
+    take = min(gidx.size, cap, max(nb * samples_per_split, nb))
+    pos = (np.arange(take, dtype=np.int64) * gidx.size) // take
+    sample = _refine_sort(store, gidx[pos])
+    splitters = sample[[(i * sample.size) // nb for i in range(1, nb)]]
+    out: List[np.ndarray] = []
+    for part in _partition(store, gidx, np.unique(splitters)):
+        out.extend(_sorted_runs(store, part, cap, samples_per_split))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the out-of-core build
+# ---------------------------------------------------------------------------
+
+
+def build_suffix_array_superblock(
+    corpus,
+    lengths=None,
+    cfg: SAConfig = SAConfig(),
+    sb: SuperblockConfig = SuperblockConfig(),
+    mesh=None,
+) -> SAResult:
+    """Out-of-core SA build: per-superblock pipeline runs + store-mediated
+    merge.  Falls back to the single-pass pipeline when one block suffices."""
+    corpus = np.asarray(corpus, np.int32)
+    plan = plan_superblocks(corpus.shape, cfg, sb)
+    if plan.num_superblocks <= 1:
+        return build_suffix_array(corpus, lengths=lengths, cfg=cfg, mesh=mesh)
+
+    store = CorpusStore(
+        corpus, cfg,
+        request_capacity=min(sb.request_capacity, plan.capacity_records),
+    )
+
+    # ---- phase 2: local SA per superblock (existing pipeline, one block
+    # of records resident per run) --------------------------------------
+    local_sas: List[np.ndarray] = []
+    fp = Footprint(
+        input=int(corpus.size) * store.token_bytes,
+        store_put=int(corpus.size) * store.token_bytes,
+        superblocks=plan.num_superblocks,
+    )
+    block_stats = []
+    for lo, hi in plan.blocks:
+        if plan.text_mode:
+            res = build_suffix_array(corpus[lo:hi], cfg=cfg, mesh=mesh)
+            sa_b = res.suffix_array + lo
+        else:
+            lens_b = None if lengths is None else np.asarray(lengths)[lo:hi]
+            res = build_suffix_array(corpus[lo:hi], lengths=lens_b, cfg=cfg, mesh=mesh)
+            sa_b = res.suffix_array + (np.int64(lo) << plan.stride_bits)
+        local_sas.append(sa_b)
+        bf = res.footprint
+        fp.shuffle += bf.shuffle
+        fp.fetch_request += bf.fetch_request
+        fp.fetch_response += bf.fetch_response
+        fp.rounds = max(fp.rounds, bf.rounds)
+        fp.dropped += bf.dropped
+        fp.peak_records = max(fp.peak_records, res.stats["num_suffixes"])
+        block_stats.append(res.stats)
+
+    # ---- phase 3: splitter-partitioned merge via the store -------------
+    # Concatenated block SAs: evenly spaced sample picks hit each block's
+    # sorted run systematically = per-block quantile candidates.
+    all_idx = np.concatenate(local_sas)
+    samples = max(1, min(
+        sb.samples_per_block,
+        plan.capacity_records // plan.num_superblocks,
+    ))
+    pre_requests = store.requests
+    pieces = _sorted_runs(store, all_idx, plan.capacity_records, samples)
+    sa = np.concatenate(pieces) if pieces else np.zeros((0,), np.int64)
+
+    fp.fetch_request += store.request_bytes
+    fp.fetch_response += store.response_bytes
+    fp.output = int(sa.shape[0]) * 8
+    fp.peak_records = max(fp.peak_records, store.peak_windows,
+                          max((p.size for p in pieces), default=0))
+    fp.materialized = fp.peak_records * 16
+
+    stats = {
+        "num_suffixes": int(sa.shape[0]),
+        "emitted": int(sa.shape[0]),
+        "superblocks": plan.num_superblocks,
+        "capacity_records": plan.capacity_records,
+        "peak_records": fp.peak_records,
+        "merge_pieces": len(pieces),
+        "max_piece": int(max((p.size for p in pieces), default=0)),
+        "merge_fetch_requests": int(store.requests - pre_requests),
+        # store counters are merge-only (the store serves no phase-2 fetch)
+        "merge_fetch_bytes": int(store.request_bytes + store.response_bytes),
+        "merge_fetch_rounds": int(store.rounds),
+        "merge_retries": int(store.retries),
+        "block_rounds": [s["rounds"] for s in block_stats],
+        "dropped": fp.dropped,
+        "unresolved": sum(s["unresolved"] for s in block_stats),
+    }
+    return SAResult(suffix_array=sa, footprint=fp, stats=stats)
+
+
+def build_suffix_array_auto(
+    corpus,
+    lengths=None,
+    cfg: SAConfig = SAConfig(),
+    sb: Optional[SuperblockConfig] = None,
+    mesh=None,
+) -> SAResult:
+    """Single entry point: single-pass when the record set fits one run,
+    out-of-core superblocks when it does not (the launcher's policy)."""
+    sb = sb or SuperblockConfig()
+    plan = plan_superblocks(np.shape(corpus), cfg, sb)
+    if plan.num_superblocks <= 1:
+        return build_suffix_array(corpus, lengths=lengths, cfg=cfg, mesh=mesh)
+    return build_suffix_array_superblock(
+        corpus, lengths=lengths, cfg=cfg, sb=sb, mesh=mesh
+    )

@@ -25,7 +25,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config import SAConfig
 from repro.core import encoding
-from repro.core.distributed import bucket_scatter, exchange, lex_bucket, sample_splitters
+from repro.core.distributed import (
+    bucket_scatter,
+    exchange,
+    lex_bucket,
+    sample_splitters,
+    shard_map,
+)
 from repro.core.pipeline import AXIS, _flat_mesh, plan
 from repro.core.store import token_bytes
 from repro.core.types import KEY_SENTINEL, Footprint, SAResult, global_index, pack_index
@@ -101,7 +107,7 @@ def build_suffix_array_terasort(
         _device_fn, cfg=cfg, num_shards=d, rows_per_shard=info["rows_per_shard"],
         stride_bits=info["stride_bits"], shuffle_cap=shuffle_cap, l=l,
     )
-    smapped = jax.shard_map(
+    smapped = shard_map(
         fn, mesh=mesh, in_specs=(P(AXIS), P(AXIS)), out_specs=(P(AXIS), P(AXIS), P(AXIS)),
     )
     ih, il_, statmat = jax.jit(smapped)(data, lens)

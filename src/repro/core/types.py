@@ -94,6 +94,12 @@ class Footprint:
     output: int = 0
     rounds: int = 0
     dropped: int = 0
+    # out-of-core accounting (core/superblock.py): number of superblocks the
+    # build was split into, and the peak number of 16-byte suffix records any
+    # single run (per-block pipeline, merge bucket, splitter batch) held at
+    # once.  superblocks == 1 <=> single-pass in-core build.
+    superblocks: int = 1
+    peak_records: int = 0
 
     def total_traffic(self) -> int:
         return self.shuffle + self.fetch_request + self.fetch_response
@@ -111,6 +117,8 @@ class Footprint:
             "output": self.output / ref,
             "rounds": self.rounds,
             "dropped": self.dropped,
+            "superblocks": self.superblocks,
+            "peak_record_bytes": self.peak_records * 16 / ref,
         }
 
 

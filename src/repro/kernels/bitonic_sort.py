@@ -23,8 +23,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _vma(x):
-    return getattr(jax.typeof(x), "vma", frozenset()) or frozenset()
+from repro.kernels.compat import out_struct, vma_of as _vma
 
 
 def _cmp_exchange(kh, kl, v, j, asc):
@@ -92,7 +91,7 @@ def bitonic_sort_tiles(key_hi, key_lo, val, tile: int = 1024,
         grid=(ntiles,),
         in_specs=[pl.BlockSpec((tile,), lambda i: (i,))] * 3,
         out_specs=[pl.BlockSpec((tile,), lambda i: (i,))] * 3,
-        out_shape=[jax.ShapeDtypeStruct(
+        out_shape=[out_struct(
             (ntiles * tile,), jnp.int32, vma=_vma(key_hi)
         )] * 3,
         interpret=interpret,

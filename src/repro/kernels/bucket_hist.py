@@ -17,8 +17,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _vma(x):
-    return getattr(jax.typeof(x), "vma", frozenset()) or frozenset()
+from repro.kernels.compat import out_struct, vma_of as _vma
 
 
 def _kernel(kh_ref, kl_ref, sh_ref, sl_ref, bucket_ref, hist_ref, *, d):
@@ -62,8 +61,8 @@ def bucket_hist(key_hi: jnp.ndarray, key_lo: jnp.ndarray,
             pl.BlockSpec((1, d), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((nblocks * block,), jnp.int32, vma=_vma(key_hi)),
-            jax.ShapeDtypeStruct((nblocks, d), jnp.int32, vma=_vma(key_hi)),
+            out_struct((nblocks * block,), jnp.int32, vma=_vma(key_hi)),
+            out_struct((nblocks, d), jnp.int32, vma=_vma(key_hi)),
         ],
         interpret=interpret,
     )(kh, kl, split_hi, split_lo)

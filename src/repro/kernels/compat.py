@@ -1,0 +1,28 @@
+"""Version-compat shims shared by the Pallas kernels.
+
+``jax.typeof`` / vma-typed outputs are post-0.5 jax features; earlier
+releases have no varying/replicated type distinction, so the shims degrade
+to "no vma" there instead of crashing at call time.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def vma_of(*xs) -> frozenset:
+    """Union of the operands' varying-manual-axes (empty on old jax)."""
+    typeof = getattr(jax, "typeof", None)
+    out = frozenset()
+    if typeof is None:
+        return out
+    for x in xs:
+        out = out | (getattr(typeof(x), "vma", frozenset()) or frozenset())
+    return out
+
+
+def out_struct(shape, dtype, vma=frozenset()):
+    """``jax.ShapeDtypeStruct`` with vma when the jax version supports it."""
+    try:
+        return jax.ShapeDtypeStruct(shape, dtype, vma=vma)
+    except TypeError:
+        return jax.ShapeDtypeStruct(shape, dtype)

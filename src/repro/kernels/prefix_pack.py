@@ -23,9 +23,7 @@ from jax.experimental import pallas as pl
 from repro.config import SAConfig
 
 
-def _vma(x):
-    """Propagate varying-manual-axes so the kernel works under shard_map."""
-    return getattr(jax.typeof(x), "vma", frozenset()) or frozenset()
+from repro.kernels.compat import out_struct, vma_of as _vma
 
 
 def _kernel(cur_ref, nxt_ref, out_ref, *, k, cpw, n_words, base, bits, packing):
@@ -72,7 +70,7 @@ def prefix_pack(tokens: jnp.ndarray, cfg: SAConfig, block: int = 512,
             pl.BlockSpec((block,), lambda i: (i + 1,)),
         ],
         out_specs=pl.BlockSpec((block, cfg.key_words), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct(
+        out_shape=out_struct(
             (nblocks * block, cfg.key_words), jnp.int32, vma=_vma(tokens)
         ),
         interpret=interpret,

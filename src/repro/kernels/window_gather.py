@@ -19,11 +19,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _vma(*xs):
-    out = frozenset()
-    for x in xs:
-        out = out | (getattr(jax.typeof(x), "vma", frozenset()) or frozenset())
-    return out
+from repro.kernels.compat import out_struct, vma_of as _vma
 
 
 def _kernel(rows_ref, offs_ref, corpus_ref, out_ref, *, k):
@@ -60,7 +56,7 @@ def window_gather(corpus: jnp.ndarray, rows: jnp.ndarray, offs: jnp.ndarray,
     out = pl.pallas_call(
         functools.partial(_kernel, k=k),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((m, k), jnp.int32, vma=_vma(corpus, rows, offs)),
+        out_shape=out_struct((m, k), jnp.int32, vma=_vma(corpus, rows, offs)),
         interpret=interpret,
     )(rows_c, offs_c, padded)
     return out

@@ -2,9 +2,17 @@
 
     PYTHONPATH=src python -m repro.launch.sa_build --reads 2000 --read-len 64
     PYTHONPATH=src python -m repro.launch.sa_build --mode doubling --text 100000
+    PYTHONPATH=src python -m repro.launch.sa_build --reads 800 --read-len 48 \
+        --max-records-per-run 10000      # forces the out-of-core path
 
 Same pipeline the dry-run lowers for 256/512 shards; here it runs on the
 locally available devices.
+
+Out-of-core policy: when the corpus's suffix-record set exceeds the per-run
+budget (``--max-records-per-run``, or an explicit ``--superblocks`` split),
+the launcher routes through ``repro.core.superblock`` — per-superblock
+pipeline runs plus a store-mediated merge — instead of one single-pass run.
+With no budget set the build is single-pass, exactly as before.
 """
 from __future__ import annotations
 
@@ -22,13 +30,18 @@ def main():
                     default="scheme")
     ap.add_argument("--packing", choices=["base", "bits"], default="base")
     ap.add_argument("--paired-end", action="store_true")
+    ap.add_argument("--superblocks", type=int, default=0,
+                    help="explicit out-of-core superblock count (0 = derive)")
+    ap.add_argument("--max-records-per-run", type=int, default=0,
+                    help="per-run suffix-record budget; exceeding corpora "
+                         "build out-of-core (0 = unbounded, single-pass)")
     args = ap.parse_args()
 
     import numpy as np
 
-    from repro.config import SAConfig
-    from repro.core.pipeline import build_suffix_array
+    from repro.config import SAConfig, SuperblockConfig
     from repro.core.prefix_doubling import build_suffix_array_doubling
+    from repro.core.superblock import build_suffix_array_auto, plan_superblocks
     from repro.core.terasort import build_suffix_array_terasort
     from repro.data.corpus import synth_dna_reads, synth_token_corpus
 
@@ -39,19 +52,29 @@ def main():
         corpus = synth_dna_reads(args.reads, args.read_len, seed=0,
                                  paired_end=args.paired_end)
 
+    sb = SuperblockConfig(
+        num_superblocks=args.superblocks,
+        max_records_per_run=args.max_records_per_run,
+    )
+
     t0 = time.perf_counter()
     if args.mode == "terasort":
         res = build_suffix_array_terasort(corpus, cfg=cfg)
     elif args.mode == "doubling":
         res = build_suffix_array_doubling(corpus.reshape(-1), cfg=cfg)
     else:
-        res = build_suffix_array(corpus, cfg=cfg)
+        plan = plan_superblocks(np.shape(corpus), cfg, sb)
+        if plan.num_superblocks > 1:
+            print(f"out-of-core: {plan.total_records} records > "
+                  f"{plan.capacity_records}/run -> "
+                  f"{plan.num_superblocks} superblocks")
+        res = build_suffix_array_auto(corpus, cfg=cfg, sb=sb)
     dt = time.perf_counter() - t0
     n = res.stats["num_suffixes"]
     print(f"mode={args.mode} suffixes={n} time={dt:.2f}s "
           f"({n / dt:.0f} suffixes/s)")
     for k, v in res.footprint.units().items():
-        print(f"  {k:>15}: {v if isinstance(v, int) else round(v, 3)}")
+        print(f"  {k:>17}: {v if isinstance(v, int) else round(v, 3)}")
     print(f"stats: {res.stats}")
 
 

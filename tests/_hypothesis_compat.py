@@ -1,0 +1,60 @@
+"""Hypothesis import shim.
+
+CI installs the real ``hypothesis`` (see pyproject ``[test]`` extra) and this
+module simply re-exports it.  Hermetic environments without the package fall
+back to a tiny deterministic sampler implementing the subset the suite uses
+(``st.integers``, ``st.lists``, ``@given``, ``@settings``) so the property
+tests still *run* — with fixed seeds instead of adversarial search — rather
+than erroring at collection (the seed-repo failure mode).
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:  # noqa: N801 - mimic the hypothesis.strategies module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.draw(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+    def settings(max_examples=20, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            # NB: deliberately no functools.wraps — pytest must see the
+            # zero-argument wrapper signature, not the strategy parameters
+            # (which it would otherwise treat as fixtures).
+            def wrapper():
+                rng = np.random.default_rng(0)
+                for _ in range(getattr(fn, "_max_examples", 20)):
+                    drawn = {k: s.draw(rng) for k, s in strats.items()}
+                    fn(**drawn)
+
+            wrapper.__name__ = getattr(fn, "__name__", "given_wrapper")
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

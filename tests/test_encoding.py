@@ -1,7 +1,7 @@
 """Unit + property tests for the numeric prefix encoding (paper §IV-B)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 import jax.numpy as jnp
 

@@ -93,7 +93,8 @@ def test_compressed_allreduce_8dev(run_multidev):
         def f(xl):
             return compressed_allreduce_int8(xl[0], "dp")[None]
 
-        sm = jax.shard_map(f, mesh=mesh, in_specs=P("dp"), out_specs=P("dp"))
+        from repro.core.distributed import shard_map
+        sm = shard_map(f, mesh=mesh, in_specs=P("dp"), out_specs=P("dp"))
         got = np.asarray(jax.jit(sm)(x))
         want = x.mean(axis=0)
         for row in got:
@@ -105,7 +106,7 @@ def test_compressed_allreduce_8dev(run_multidev):
         def g(xl, el):
             r, e = compressed_allreduce_topk(xl[0], "dp", 0.25, el[0])
             return r[None], e[None]
-        sm2 = jax.shard_map(g, mesh=mesh, in_specs=(P("dp"), P("dp")),
+        sm2 = shard_map(g, mesh=mesh, in_specs=(P("dp"), P("dp")),
                             out_specs=(P("dp"), P("dp")))
         jg = jax.jit(sm2)
         for _ in range(30):

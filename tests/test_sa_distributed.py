@@ -97,6 +97,7 @@ def test_store_primitives_8dev(run_multidev):
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import Mesh, PartitionSpec as P
         from repro.core.store import StoreSpec, mget_scalar, scatter_update
+        from repro.core.distributed import shard_map
 
         mesh = Mesh(np.array(jax.devices()), ("sa",))
         d, rows = 8, 16
@@ -111,8 +112,8 @@ def test_store_primitives_8dev(run_multidev):
         vals = np.arange(d * rows, dtype=np.int32)
         rng = np.random.default_rng(0)
         pos = rng.permutation(d * rows).astype(np.int32)
-        sm = jax.shard_map(f, mesh=mesh, in_specs=(P("sa"), P("sa")),
-                           out_specs=(P("sa"), P("sa")))
+        sm = shard_map(f, mesh=mesh, in_specs=(P("sa"), P("sa")),
+                       out_specs=(P("sa"), P("sa")))
         got, dropped = jax.jit(sm)(vals, pos)
         assert np.array_equal(np.asarray(got), vals[pos]), "mget"
         assert np.asarray(dropped).sum() == 0
@@ -123,8 +124,8 @@ def test_store_primitives_8dev(run_multidev):
             return out, dropped[None]
 
         newv = (np.arange(d * rows) * 7 % 1000).astype(np.int32)
-        sm2 = jax.shard_map(g, mesh=mesh, in_specs=(P("sa"),) * 3,
-                            out_specs=(P("sa"), P("sa")))
+        sm2 = shard_map(g, mesh=mesh, in_specs=(P("sa"),) * 3,
+                        out_specs=(P("sa"), P("sa")))
         out, dropped = jax.jit(sm2)(np.zeros(d * rows, np.int32), pos, newv)
         expect = np.zeros(d * rows, np.int32)
         expect[pos] = newv

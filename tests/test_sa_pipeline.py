@@ -1,7 +1,7 @@
 """System tests: the paper's scheme vs the exact oracle (single device)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.config import SAConfig
 from repro.core.oracle import (

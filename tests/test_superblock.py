@@ -1,0 +1,116 @@
+"""Out-of-core superblock construction vs the exact oracles.
+
+Acceptance properties (ISSUE 1): with >= 3 superblocks the build must
+reproduce the oracle suffix array exactly on random *and* highly repetitive
+(ATAT...) corpora, in both reads mode and long-text mode, while the peak
+per-run record footprint stays bounded by one superblock (checked through
+the ``Footprint`` accounting).
+"""
+import numpy as np
+
+from repro.config import SAConfig, SuperblockConfig
+from repro.core.oracle import doubling_sa_text, naive_sa_reads, naive_sa_text
+from repro.core.superblock import (
+    build_suffix_array_auto,
+    build_suffix_array_superblock,
+    plan_superblocks,
+)
+
+CFG = SAConfig(vocab_size=4, chars_per_word=2, key_words=2)  # K=4: forces rounds
+
+
+def _check_bounded(res, plan):
+    assert res.footprint.superblocks == plan.num_superblocks
+    assert res.footprint.peak_records <= plan.capacity_records
+    assert res.stats["max_piece"] <= plan.capacity_records
+
+
+def test_plan_derives_block_count_from_budget():
+    sb = SuperblockConfig(max_records_per_run=1000)
+    plan = plan_superblocks((48, 12), CFG, sb)  # 48*(12+1) = 624 <= budget
+    assert plan.num_superblocks == 1
+    plan = plan_superblocks((480, 12), CFG, sb)  # 6240 records -> 7 blocks
+    assert plan.num_superblocks >= 3
+    assert plan.capacity_records <= 1000
+    assert sum(hi - lo for lo, hi in plan.blocks) == 480
+    # item rounding must not overshoot an achievable budget: (3, 99) rows are
+    # 100 records each; budget 150 fits one row per block, never two.
+    plan = plan_superblocks((3, 99), CFG, SuperblockConfig(max_records_per_run=150))
+    assert plan.num_superblocks == 3
+    assert plan.capacity_records == 100
+
+
+def test_reads_random_matches_oracle():
+    rng = np.random.default_rng(0)
+    reads = rng.integers(1, 5, size=(48, 12)).astype(np.int32)
+    sb = SuperblockConfig(num_superblocks=4)
+    res = build_suffix_array_superblock(reads, cfg=CFG, sb=sb)
+    np.testing.assert_array_equal(res.suffix_array, naive_sa_reads(reads))
+    _check_bounded(res, plan_superblocks(reads.shape, CFG, sb))
+
+
+def test_reads_repetitive_matches_oracle():
+    """Identical ATAT... reads: every suffix massively duplicated, so the
+    merge is exercised on its worst case — deep ties broken only by index."""
+    reads = np.tile(np.array([1, 2] * 6, np.int32), (36, 1))
+    sb = SuperblockConfig(num_superblocks=3)
+    res = build_suffix_array_superblock(reads, cfg=CFG, sb=sb)
+    np.testing.assert_array_equal(res.suffix_array, naive_sa_reads(reads))
+    _check_bounded(res, plan_superblocks(reads.shape, CFG, sb))
+
+
+def test_reads_variable_lengths():
+    rng = np.random.default_rng(1)
+    lens = rng.integers(0, 11, size=(30,)).astype(np.int32)
+    reads = np.zeros((30, 11), np.int32)
+    for i, n in enumerate(lens):
+        reads[i, :n] = rng.integers(1, 5, size=(n,))
+    res = build_suffix_array_superblock(
+        reads, lengths=lens, cfg=CFG, sb=SuperblockConfig(num_superblocks=3)
+    )
+    np.testing.assert_array_equal(res.suffix_array, naive_sa_reads(reads, lens))
+
+
+def test_text_random_matches_oracle():
+    rng = np.random.default_rng(2)
+    text = rng.integers(1, 5, size=(480,)).astype(np.int32)
+    sb = SuperblockConfig(num_superblocks=4)
+    res = build_suffix_array_superblock(text, cfg=CFG, sb=sb)
+    np.testing.assert_array_equal(res.suffix_array, doubling_sa_text(text))
+    _check_bounded(res, plan_superblocks(text.shape, CFG, sb))
+
+
+def test_text_repetitive_matches_oracle():
+    """ATAT... text: block-local SAs are provisional near block tails (ties
+    cross every boundary), so this proves the merge re-ranks correctly."""
+    text = np.tile(np.array([1, 2], np.int32), 180)
+    sb = SuperblockConfig(num_superblocks=3)
+    res = build_suffix_array_superblock(text, cfg=CFG, sb=sb)
+    np.testing.assert_array_equal(res.suffix_array, naive_sa_text(text))
+    _check_bounded(res, plan_superblocks(text.shape, CFG, sb))
+
+
+def test_capacity_retries_stay_exact():
+    """A tiny merge fetch capacity forces group-synchronous retries; the
+    result must not change (partial service never corrupts a comparison)."""
+    text = np.tile(np.array([1, 2], np.int32), 120)
+    sb = SuperblockConfig(num_superblocks=3, request_capacity=16)
+    res = build_suffix_array_superblock(text, cfg=CFG, sb=sb)
+    np.testing.assert_array_equal(res.suffix_array, naive_sa_text(text))
+    assert res.stats["merge_retries"] > 0  # the path was actually exercised
+
+
+def test_auto_routes_by_budget():
+    rng = np.random.default_rng(3)
+    reads = rng.integers(1, 5, size=(40, 9)).astype(np.int32)
+    ref = naive_sa_reads(reads)
+    ooc = build_suffix_array_auto(
+        reads, cfg=CFG, sb=SuperblockConfig(max_records_per_run=120)
+    )
+    assert ooc.footprint.superblocks >= 3
+    np.testing.assert_array_equal(ooc.suffix_array, ref)
+    single = build_suffix_array_auto(
+        reads, cfg=CFG, sb=SuperblockConfig(max_records_per_run=10**9)
+    )
+    assert single.footprint.superblocks == 1
+    np.testing.assert_array_equal(single.suffix_array, ref)
