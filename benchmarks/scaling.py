@@ -64,14 +64,23 @@ def run_pathological(reps=(50, 100, 200), csv=True):
     return rows
 
 
-def run_out_of_core(sizes=(200, 400), read_len=24, superblocks=4, csv=True):
+def run_out_of_core(sizes=(200, 400), read_len=24, superblocks=4, csv=True,
+                    min_ratio=3.0):
     """Out-of-core smoke/footprint: the same corpus built single-pass vs
-    split into superblocks.  The point is the *peak per-run record footprint*
-    column — bounded by one superblock for the out-of-core build while the
-    single-pass run must hold every record at once (the paper's
-    bounded-by-store-capacity claim, beyond one run's memory)."""
+    split into superblocks.  Two claims are checked loudly:
+
+    * *peak per-run record footprint* — bounded by one superblock for the
+      out-of-core build while the single-pass run must hold every record at
+      once (the paper's bounded-by-store-capacity claim);
+    * *merge store traffic* — the boundary-exact k-way merge must move at
+      least ``min_ratio`` x fewer bytes than the wholesale re-rank baseline
+      (``merge_algorithm="rerank"``) at equal config.  A regression below
+      that ratio raises, failing the CI smoke.
+    """
     cfg = SAConfig(vocab_size=4, packing="base")
     sb = SuperblockConfig(num_superblocks=superblocks)
+    sb_rerank = SuperblockConfig(num_superblocks=superblocks,
+                                 merge_algorithm="rerank")
     rows = []
     for n in sizes:
         reads = synth_dna_reads(n, read_len, seed=n)
@@ -81,8 +90,19 @@ def run_out_of_core(sizes=(200, 400), read_len=24, superblocks=4, csv=True):
         t0 = time.perf_counter()
         ooc = build_suffix_array_superblock(reads, cfg=cfg, sb=sb)
         t_ooc = time.perf_counter() - t0
+        rerank = build_suffix_array_superblock(reads, cfg=cfg, sb=sb_rerank)
         assert np.array_equal(single.suffix_array, ooc.suffix_array)
+        assert np.array_equal(single.suffix_array, rerank.suffix_array)
         total = single.stats["num_suffixes"]
+        kway_bytes = ooc.stats["merge_fetch_bytes"]
+        rerank_bytes = rerank.stats["merge_fetch_bytes"]
+        ratio = rerank_bytes / max(kway_bytes, 1)
+        if ratio < min_ratio:
+            raise AssertionError(
+                f"merge-traffic regression: k-way merge moved {kway_bytes} B "
+                f"vs re-rank {rerank_bytes} B (ratio {ratio:.2f}x < "
+                f"{min_ratio}x) at reads={n}"
+            )
         rows.append(dict(
             reads=n,
             total_records=total,
@@ -90,16 +110,21 @@ def run_out_of_core(sizes=(200, 400), read_len=24, superblocks=4, csv=True):
             ooc_peak=ooc.footprint.peak_records,
             ooc_superblocks=ooc.footprint.superblocks,
             single_s=t_single, ooc_s=t_ooc,
-            ooc_merge_bytes=ooc.stats["merge_fetch_bytes"],
+            ooc_merge_bytes=kway_bytes,
+            rerank_merge_bytes=rerank_bytes,
+            merge_ratio=ratio,
         ))
     if csv:
-        print("# out-of-core superblock build — peak per-run records vs single-pass")
+        print("# out-of-core superblock build — peak per-run records vs "
+              "single-pass; k-way vs re-rank merge traffic")
         print("reads,total_records,single_peak,ooc_peak,ooc_superblocks,"
-              "single_s,ooc_s,ooc_merge_bytes")
+              "single_s,ooc_s,ooc_merge_bytes,rerank_merge_bytes,merge_ratio")
         for r in rows:
             print(f"{r['reads']},{r['total_records']},{r['single_peak']},"
                   f"{r['ooc_peak']},{r['ooc_superblocks']},"
-                  f"{r['single_s']:.2f},{r['ooc_s']:.2f},{r['ooc_merge_bytes']}")
+                  f"{r['single_s']:.2f},{r['ooc_s']:.2f},"
+                  f"{r['ooc_merge_bytes']},{r['rerank_merge_bytes']},"
+                  f"{r['merge_ratio']:.2f}")
     return rows
 
 

@@ -326,12 +326,28 @@ class SuperblockConfig:
       local SA (clamped so the pooled sample also fits one superblock).
     ``request_capacity``: merge-time store fetch batch size (requests per
       round; overflowing tie groups retry group-synchronously).
+    ``merge_algorithm``: how buckets are ordered during the merge.
+      * ``"kway"`` (default) — splitter ranks are located inside each sorted
+        block run by O(log n) binary-search store comparisons and the runs
+        are k-way merged at run heads, fetching comparison windows only to
+        tie-breaking depth (text mode re-ranks only the block-boundary risk
+        set).
+      * ``"rerank"`` — the PR-1 baseline: every bucket is re-ranked from
+        scratch by the group-synchronous refinement loop.  Kept as the
+        merge-traffic reference (``benchmarks.run superblock``).
+    ``merge_backend``: where bucket refinement runs.
+      * ``"host"`` (default) — numpy against the host-resident store.
+      * ``"device"`` — the refinement loop runs TPU-resident under the same
+        ``shard_map`` reducer as the pipeline, windows served by
+        ``mget_window`` (``repro.core.pipeline.DeviceRefiner``).
     """
 
     max_records_per_run: int = 0
     num_superblocks: int = 0
     samples_per_block: int = 32
     request_capacity: int = 4096
+    merge_algorithm: str = "kway"
+    merge_backend: str = "host"
 
 
 # ---------------------------------------------------------------------------

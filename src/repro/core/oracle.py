@@ -47,7 +47,6 @@ def doubling_sa_text(text: np.ndarray) -> np.ndarray:
     text = np.asarray(text, np.int64)
     n = len(text)
     rank = text.copy()
-    sa = np.argsort(rank, kind="stable")
     k = 1
     while True:
         rank2 = np.zeros(n, np.int64)

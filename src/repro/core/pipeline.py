@@ -49,6 +49,8 @@ from repro.core.distributed import (
 from repro.core.store import StoreSpec, mget_window, token_bytes
 from repro.core.types import (
     KEY_SENTINEL,
+    WORD_BITS,
+    WORD_MOD,
     Footprint,
     SAResult,
     global_index,
@@ -69,6 +71,110 @@ def _tied(g: jnp.ndarray) -> jnp.ndarray:
     prev = jnp.concatenate([jnp.array([-1], g.dtype), g[:-1]])
     nxt = jnp.concatenate([g[1:], jnp.array([-2], g.dtype)])
     return (g == prev) | (g == nxt)
+
+
+def _suffix_exhausted(ih, il, depth, *, text_mode, text_len, uniform_len,
+                      stride_bits, k):
+    """Analytic exhaustion: the first ``depth * k`` tokens already covered the
+    whole suffix (locally computable in text mode / uniform-length reads)."""
+    if text_mode:
+        rem = text_len - il
+    else:
+        _, off = unpack_index(ih, il, stride_bits)
+        rem = uniform_len - off
+    return rem <= depth * k
+
+
+def _refine_tie_groups(g, ih, il, exhausted, *, store_local, spec, cfg,
+                       analytic, text_mode, text_len, uniform_len,
+                       stride_bits, hard_cap):
+    """Group-synchronous window-refinement loop (the reduce-phase core).
+
+    Shared by the full pipeline (:func:`_device_fn`) and the out-of-core
+    merge's device-side bucket refinement (:func:`_refiner_fn`): still-tied
+    groups of suffixes fetch their next K-token window from the store
+    (``mget_window``) and re-sort within the group, a group only consuming a
+    window when every active member was served.  Runs under ``shard_map``;
+    returns the final ``(g, ih, il, exhausted, depth, stats)`` carry.
+    """
+    axis = spec.axis
+    n = ih.shape[0]
+    k = cfg.prefix_len
+
+    zero = pvary(jnp.int32(0), axis)
+    depth0 = pvary(jnp.ones((n,), jnp.int32), axis)  # K tokens consumed
+    stats0 = dict(
+        iters=zero,
+        fetch_requests=zero,
+        fetch_request_bytes=zero,
+        fetch_response_bytes=zero,
+        retries=zero,
+        max_depth=zero + 1,
+    )
+
+    def cond(carry):
+        g, ih, il, exhausted, depth, stats = carry
+        active = _tied(g) & ~exhausted & (ih != KEY_SENTINEL)
+        total = lax.psum(jnp.sum(active), axis)
+        return (total > 0) & (stats["iters"] < hard_cap)
+
+    def body(carry):
+        g, ih, il, exhausted, depth, stats = carry
+        validr = ih != KEY_SENTINEL
+        if analytic:
+            exhausted = _suffix_exhausted(
+                ih, il, depth, text_mode=text_mode, text_len=text_len,
+                uniform_len=uniform_len, stride_bits=stride_bits, k=k,
+            ) | ~validr
+        active = _tied(g) & ~exhausted & validr
+        if text_mode:
+            row = il + depth * k  # absolute window start owns the request
+            off = jnp.zeros_like(il)
+        else:
+            row, off0 = unpack_index(ih, il, stride_bits)
+            off = off0 + depth * k
+        resp, exh_new, ok, fs = mget_window(store_local, row, off, active, spec, cfg)
+        if cfg.server_pack:
+            words = resp  # packed server-side (beyond-paper compression)
+        else:
+            words = encoding.pack_words(resp, cfg)
+        # group-synchronous advance: a group consumes its window only if every
+        # active member was served; otherwise the whole group retries.
+        member_ok = jnp.where(active, ok, True).astype(jnp.int32)
+        seg_ok = jax.ops.segment_min(member_ok, g, num_segments=n)
+        adv = (seg_ok[jnp.clip(g, 0, n - 1)] > 0) & validr
+        nk_hi = jnp.where(adv & active, words[:, 0], 0)
+        nk_lo = jnp.where(adv & active, words[:, 1], 0)
+        if not analytic:
+            exhausted = jnp.where(adv & active, exh_new, exhausted)
+        depth = jnp.where(adv & active, depth + 1, depth)
+        exh_i = exhausted.astype(jnp.int32)
+        g, nk_hi, nk_lo, ih, il, exh_i, depth = lax.sort(
+            (g, nk_hi, nk_lo, ih, il, exh_i, depth), num_keys=5
+        )
+        exhausted = exh_i > 0
+        validr = ih != KEY_SENTINEL
+        eq = jnp.concatenate(
+            [
+                jnp.array([False]),
+                (g[1:] == g[:-1])
+                & (nk_hi[1:] == nk_hi[:-1])
+                & (nk_lo[1:] == nk_lo[:-1]),
+            ]
+        )
+        eq = eq & validr
+        g = run_starts(eq)
+        stats = dict(
+            iters=stats["iters"] + 1,
+            fetch_requests=stats["fetch_requests"] + fs.requests,
+            fetch_request_bytes=stats["fetch_request_bytes"] + fs.request_bytes,
+            fetch_response_bytes=stats["fetch_response_bytes"] + fs.response_bytes,
+            retries=stats["retries"] + fs.dropped,
+            max_depth=jnp.maximum(stats["max_depth"], jnp.max(depth)),
+        )
+        return (g, ih, il, exhausted, depth, stats)
+
+    return lax.while_loop(cond, body, (g, ih, il, exhausted, depth0, stats0))
 
 
 def _map_phase(reads_l, lengths_l, halo_l, *, cfg, rows_per_shard, stride_bits,
@@ -155,7 +261,6 @@ def _device_fn(
         valid0.reshape(-1) & (slot >= d * shuffle_cap)
     ).astype(jnp.int32)
     recv = exchange(buf[:d], AXIS).reshape(d * shuffle_cap, 4)
-    n = recv.shape[0]
 
     # ---- Reduce: initial sort ----------------------------------------
     kh, kl, ih, il = (recv[:, i] for i in range(4))
@@ -174,16 +279,11 @@ def _device_fn(
     # variable-length reads resolve lazily via fetch-response flags.
     analytic = text_mode or (uniform_len is not None)
 
-    def _exhausted_at(ihh, ill, depth):
-        if text_mode:
-            rem = text_len - ill
-        else:
-            _, off = unpack_index(ihh, ill, stride_bits)
-            rem = uniform_len - off
-        return rem <= depth * k
-
     if analytic:
-        exhausted = _exhausted_at(ih, il, jnp.int32(1))
+        exhausted = _suffix_exhausted(
+            ih, il, jnp.int32(1), text_mode=text_mode, text_len=text_len,
+            uniform_len=uniform_len, stride_bits=stride_bits, k=k,
+        )
     else:
         exhausted = jnp.zeros_like(validr)  # resolved lazily via fetch flags
     exhausted = exhausted | ~validr
@@ -203,79 +303,11 @@ def _device_fn(
     else:
         store_local = reads_l
 
-    zero = pvary(jnp.int32(0), AXIS)
-    depth0 = pvary(jnp.ones((n,), jnp.int32), AXIS)  # K tokens consumed
-    stats0 = dict(
-        iters=zero,
-        fetch_requests=zero,
-        fetch_request_bytes=zero,
-        fetch_response_bytes=zero,
-        retries=zero,
-        max_depth=zero + 1,
-    )
-    hard_cap = 2 * max_rounds + 8
-
-    def cond(carry):
-        g, ih, il, exhausted, depth, stats = carry
-        active = _tied(g) & ~exhausted & (ih != KEY_SENTINEL)
-        total = lax.psum(jnp.sum(active), AXIS)
-        return (total > 0) & (stats["iters"] < hard_cap)
-
-    def body(carry):
-        g, ih, il, exhausted, depth, stats = carry
-        validr = ih != KEY_SENTINEL
-        if analytic:
-            exhausted = _exhausted_at(ih, il, depth) | ~validr
-        active = _tied(g) & ~exhausted & validr
-        if text_mode:
-            row = il + depth * k  # absolute window start owns the request
-            off = jnp.zeros_like(il)
-        else:
-            row, off0 = unpack_index(ih, il, stride_bits)
-            off = off0 + depth * k
-        resp, exh_new, ok, fs = mget_window(store_local, row, off, active, spec, cfg)
-        if cfg.server_pack:
-            words = resp  # packed server-side (beyond-paper compression)
-        else:
-            words = encoding.pack_words(resp, cfg)
-        # group-synchronous advance: a group consumes its window only if every
-        # active member was served; otherwise the whole group retries.
-        member_ok = jnp.where(active, ok, True).astype(jnp.int32)
-        seg_ok = jax.ops.segment_min(member_ok, g, num_segments=n)
-        adv = (seg_ok[jnp.clip(g, 0, n - 1)] > 0) & validr
-        nk_hi = jnp.where(adv & active, words[:, 0], 0)
-        nk_lo = jnp.where(adv & active, words[:, 1], 0)
-        if not analytic:
-            exhausted = jnp.where(adv & active, exh_new, exhausted)
-        depth = jnp.where(adv & active, depth + 1, depth)
-        exh_i = exhausted.astype(jnp.int32)
-        g, nk_hi, nk_lo, ih, il, exh_i, depth = lax.sort(
-            (g, nk_hi, nk_lo, ih, il, exh_i, depth), num_keys=5
-        )
-        exhausted = exh_i > 0
-        validr = ih != KEY_SENTINEL
-        eq = jnp.concatenate(
-            [
-                jnp.array([False]),
-                (g[1:] == g[:-1])
-                & (nk_hi[1:] == nk_hi[:-1])
-                & (nk_lo[1:] == nk_lo[:-1]),
-            ]
-        )
-        eq = eq & validr
-        g = run_starts(eq)
-        stats = dict(
-            iters=stats["iters"] + 1,
-            fetch_requests=stats["fetch_requests"] + fs.requests,
-            fetch_request_bytes=stats["fetch_request_bytes"] + fs.request_bytes,
-            fetch_response_bytes=stats["fetch_response_bytes"] + fs.response_bytes,
-            retries=stats["retries"] + fs.dropped,
-            max_depth=jnp.maximum(stats["max_depth"], jnp.max(depth)),
-        )
-        return (g, ih, il, exhausted, depth, stats)
-
-    g, ih, il, exhausted, depth, stats = lax.while_loop(
-        cond, body, (g, ih, il, exhausted, depth0, stats0)
+    g, ih, il, exhausted, depth, stats = _refine_tie_groups(
+        g, ih, il, exhausted, store_local=store_local, spec=spec, cfg=cfg,
+        analytic=analytic, text_mode=text_mode, text_len=text_len,
+        uniform_len=uniform_len, stride_bits=stride_bits,
+        hard_cap=2 * max_rounds + 8,
     )
 
     # unresolved = groups still tied and not exhausted when hard_cap hit
@@ -498,3 +530,237 @@ def _finalize(ih, il, statmat, corpus, cfg: SAConfig) -> SAResult:
         "unresolved": int(statmat[:, 8].sum()),
     }
     return SAResult(suffix_array=sa, footprint=fp, stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# Device-side index-set refinement (the out-of-core merge's device backend)
+# ---------------------------------------------------------------------------
+
+
+def _refiner_fn(
+    idx_hi: jnp.ndarray,
+    idx_lo: jnp.ndarray,
+    reads_l: jnp.ndarray,
+    lengths_l: jnp.ndarray,
+    halo_l: jnp.ndarray,
+    *,
+    cfg: SAConfig,
+    num_shards: int,
+    rows_per_shard: int,
+    row_len: int,
+    stride_bits: int,
+    cap: int,
+    max_rounds: int,
+    uniform_len: Optional[int],
+    text_mode: bool,
+    text_len: int,
+):
+    """Per-device body ranking an arbitrary suffix-index set (under shard_map).
+
+    The device analogue of the host merge's ``_refine_sort``: each device
+    holds a slice of the index set (padding slots carry ``idx_hi == -1``),
+    fetches the depth-0 windows remotely via :func:`mget_window`, sample-sorts
+    the resulting 16-byte records across the axis (equal keys colocate), and
+    refines still-tied groups with the same loop as the pipeline reducer.
+
+    ``cap`` is the per-device slice length.  Capacities are sized for zero
+    drops: the record shuffle needs only ``cap`` per bucket (a device sends
+    at most its ``cap`` input records), but the refinement loop runs *after*
+    sample-sort colocation, where one device can hold up to ``d * cap`` tied
+    records whose window requests may all target one owner shard — so the
+    fetch capacity must be ``d * cap``.  No retry rounds occur and the
+    result is deterministic in one pass.
+    """
+    d = num_shards
+    k = cfg.prefix_len
+    valid0 = idx_hi >= 0
+
+    spec = StoreSpec(
+        axis=AXIS,
+        num_shards=d,
+        rows_per_shard=rows_per_shard,
+        row_len=row_len,
+        request_capacity=d * cap,
+    )
+    if text_mode:
+        store_local = jnp.concatenate([reads_l.reshape(-1), halo_l.reshape(-1)])
+        store_local = store_local[:, None]
+        row = jnp.where(valid0, idx_lo, 0)
+        off = jnp.zeros_like(idx_lo)
+    else:
+        store_local = reads_l
+        row, off = unpack_index(idx_hi, idx_lo, stride_bits)
+
+    # depth-0 windows for the local slice (remote fetch: the indexes are
+    # arbitrary, their tokens live on whichever device owns them)
+    win, exh0, ok, fs0 = mget_window(store_local, row, off, valid0, spec, cfg)
+    words = win if cfg.server_pack else encoding.pack_words(win, cfg)
+    kh = jnp.where(valid0, words[:, 0], KEY_SENTINEL)
+    kl = jnp.where(valid0, words[:, 1], KEY_SENTINEL)
+
+    # sample-sort the records across the axis: equal initial keys colocate
+    # (lex_bucket is strict-less-than), so all further refinement is local.
+    rec = jnp.stack(
+        [kh, kl,
+         jnp.where(valid0, idx_hi, KEY_SENTINEL),
+         jnp.where(valid0, idx_lo, KEY_SENTINEL),
+         exh0.astype(jnp.int32)],
+        axis=1,
+    )
+    s_hi, s_lo = sample_splitters(kh, kl, cfg.samples_per_shard, AXIS)
+    bucket = jnp.where(valid0, lex_bucket(kh, kl, s_hi, s_lo), jnp.int32(d))
+    buf, slot, _ = bucket_scatter(rec, bucket, d + 1, cap, KEY_SENTINEL)
+    drop = jnp.sum(valid0 & (slot >= d * cap)).astype(jnp.int32)
+    recv = exchange(buf[:d], AXIS).reshape(d * cap, 5)
+    kh, kl, ih, il, exh_i = (recv[:, i] for i in range(5))
+    kh, kl, ih, il, exh_i = lax.sort((kh, kl, ih, il, exh_i), num_keys=4)
+    validr = ih != KEY_SENTINEL
+
+    eq = jnp.concatenate(
+        [jnp.array([False]), (kh[1:] == kh[:-1]) & (kl[1:] == kl[:-1])]
+    )
+    eq = eq & validr
+    g = run_starts(eq)
+
+    analytic = text_mode or (uniform_len is not None)
+    if analytic:
+        exhausted = _suffix_exhausted(
+            ih, il, jnp.int32(1), text_mode=text_mode, text_len=text_len,
+            uniform_len=uniform_len, stride_bits=stride_bits, k=k,
+        )
+    else:
+        exhausted = exh_i > 0  # resolved by the depth-0 fetch flags
+    exhausted = exhausted | ~validr
+
+    g, ih, il, exhausted, depth, stats = _refine_tie_groups(
+        g, ih, il, exhausted, store_local=store_local, spec=spec, cfg=cfg,
+        analytic=analytic, text_mode=text_mode, text_len=text_len,
+        uniform_len=uniform_len, stride_bits=stride_bits,
+        hard_cap=2 * max_rounds + 8,
+    )
+
+    unresolved = jnp.sum(
+        _tied(g) & ~exhausted & (ih != KEY_SENTINEL)
+    ).astype(jnp.int32)
+    count = jnp.sum(ih != KEY_SENTINEL).astype(jnp.int32)
+    statvec = jnp.stack(
+        [
+            count,
+            stats["fetch_requests"] + fs0.requests,
+            stats["fetch_request_bytes"] + fs0.request_bytes,
+            stats["fetch_response_bytes"] + fs0.response_bytes,
+            stats["iters"] + 1,  # service rounds incl. the depth-0 fetch
+            stats["retries"] + fs0.dropped + drop,
+            unresolved,
+            stats["max_depth"],
+        ]
+    )
+    return ih, il, statvec[None, :]
+
+
+class DeviceRefiner:
+    """Device-resident ranking of arbitrary suffix-index sets.
+
+    The out-of-core merge's ``merge_backend="device"`` seam: wherever the
+    host merge would rank a batch of global suffix indexes with numpy
+    (splitter pools, oversized merge buckets, text-mode boundary re-ranks),
+    this class runs the same group-synchronous window-refinement loop
+    TPU-resident under ``shard_map``, windows served by ``mget_window`` from
+    the device-sharded corpus — the merge never leaves the accelerator for
+    bucket ranking.
+
+    Jitted refiner programs are cached per padded batch size (sizes round up
+    to the next power of two per device, so a merge compiles O(log capacity)
+    programs, not one per bucket).  Fetch-byte accounting accumulates across
+    calls and is folded into the merge's ``merge_fetch_bytes``.
+    """
+
+    def __init__(self, corpus, cfg: SAConfig, lengths=None, mesh=None):
+        self.cfg = cfg
+        self.mesh = _flat_mesh(mesh)
+        self.d = self.mesh.devices.size
+        corpus = np.asarray(corpus, np.int32)
+        self.info = plan(corpus.shape, cfg, self.d, lengths)
+        data, lens, halo = _shard_inputs(corpus, lengths, cfg, self.d, self.info)
+        sharding = NamedSharding(self.mesh, P(AXIS))
+        self._data = jax.device_put(data, sharding)
+        self._lens = jax.device_put(lens, sharding)
+        self._halo = jax.device_put(halo, sharding)
+        self._fns = {}
+        # accounting (read by the superblock merge)
+        self.requests = 0
+        self.request_bytes = 0
+        self.response_bytes = 0
+        self.rounds = 0
+        self.retries = 0
+        self.peak_records = 0
+        self.calls = 0
+
+    def _fn(self, per_dev: int):
+        fn = self._fns.get(per_dev)
+        if fn is None:
+            body = partial(
+                _refiner_fn,
+                cfg=self.cfg,
+                num_shards=self.d,
+                rows_per_shard=self.info["rows_per_shard"],
+                row_len=self.info["row_len"],
+                stride_bits=self.info["stride_bits"],
+                cap=per_dev,
+                max_rounds=self.info["max_rounds"],
+                uniform_len=self.info["uniform_len"],
+                text_mode=self.info["text_mode"],
+                text_len=self.info["text_len"],
+            )
+            smapped = shard_map(
+                body, mesh=self.mesh,
+                in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
+                out_specs=(P(AXIS), P(AXIS), P(AXIS)),
+                check_vma=not self.cfg.use_pallas,
+            )
+            fn = self._fns[per_dev] = jax.jit(smapped)
+        return fn
+
+    def refine(self, gidx: np.ndarray) -> np.ndarray:
+        """Rank ``gidx`` (int64 global suffix indexes) in exact suffix order."""
+        gidx = np.asarray(gidx, np.int64)
+        m = gidx.shape[0]
+        if m <= 1:
+            return gidx.copy()
+        per_dev = 1 << max(0, (-(-m // self.d) - 1)).bit_length()
+        m_pad = per_dev * self.d
+        ih = np.full(m_pad, -1, np.int32)
+        il = np.full(m_pad, -1, np.int32)
+        ih[:m] = (gidx >> WORD_BITS).astype(np.int32)
+        il[:m] = (gidx & (WORD_MOD - 1)).astype(np.int32)
+        out_ih, out_il, statmat = self._fn(per_dev)(
+            ih, il, self._data, self._lens, self._halo
+        )
+        out_ih, out_il = np.asarray(out_ih), np.asarray(out_il)
+        statmat = np.asarray(statmat)
+        if int(statmat[:, 6].sum()) > 0 or int(statmat[:, 5].sum()) > 0:
+            raise RuntimeError(
+                "device refinement did not converge (unresolved ties/drops)"
+            )
+        self.calls += 1
+        self.requests += int(statmat[:, 1].sum())
+        self.request_bytes += int(statmat[:, 2].sum())
+        self.response_bytes += int(statmat[:, 3].sum())
+        self.rounds += int(statmat[:, 4].max())
+        self.peak_records = max(self.peak_records, m)
+        n_per = out_ih.shape[0] // self.d
+        chunks = []
+        for i in range(self.d):
+            lo = i * n_per
+            cnt = int(statmat[i, 0])
+            chunks.append(global_index(out_ih[lo : lo + cnt], out_il[lo : lo + cnt]))
+        out = np.concatenate(chunks) if chunks else np.zeros((0,), np.int64)
+        assert out.shape[0] == m, (out.shape, m)
+        return out
+
+
+def refine_indices(
+    corpus, gidx, cfg: SAConfig = SAConfig(), lengths=None, mesh=None
+) -> np.ndarray:
+    """One-shot convenience wrapper over :class:`DeviceRefiner`."""
+    return DeviceRefiner(corpus, cfg, lengths=lengths, mesh=mesh).refine(gidx)

@@ -140,7 +140,6 @@ def _global_rerank(k1, k2, d):
     is_last = jnp.arange(m) == last
     tied = eq | nxt_eq | (is_last & cont_out & has)
     # first record continuing from previous device is also tied
-    cont_in = ls == 0
     first_cont = (
         (jnp.arange(m) == 0) & valid & (rank != gpos)
     )
@@ -199,7 +198,6 @@ def _device_fn(
         new_rank, tied, c = _global_rerank(r1s, r2s, d)
         store, dropw = scatter_update(store, ps, new_rank, ps != KEY_SENTINEL, spec)
         n_tied = jnp.sum(tied).astype(jnp.int32)
-        m = rank.shape[0]
         stats = dict(
             rounds=stats["rounds"] + 1,
             shuffles_bytes=stats["shuffles_bytes"] + c * 12,

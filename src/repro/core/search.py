@@ -74,7 +74,6 @@ def align_reads(
     pat = np.asarray(pattern, reads.dtype)
     r_ids = (sa_gidx >> stride_bits).astype(np.int64)
     offs = (sa_gidx & ((1 << stride_bits) - 1)).astype(np.int64)
-    l = reads.shape[1]
 
     def cmp(i: int) -> int:
         row, off = int(r_ids[i]), int(offs[i])

@@ -90,7 +90,6 @@ def mget_window(
     """
     k = window or cfg.prefix_len
     d, cap = spec.num_shards, spec.request_capacity
-    m = row_id.shape[0]
 
     owner = jnp.where(
         active, (row_id // spec.rows_per_shard).astype(jnp.int32), jnp.int32(d)
@@ -279,6 +278,12 @@ class CorpusStore:
         self.rounds = 0
         self.peak_windows = 0
 
+    @property
+    def max_window_depth(self) -> int:
+        """Upper bound on K-token windows any suffix comparison can consume
+        (one extra all-zero window past the end resolves exhaustion)."""
+        return -(-self.max_len // self.k) + 2
+
     # -- raw gather ---------------------------------------------------------
     def _gather(self, gidx: np.ndarray, depth: np.ndarray) -> np.ndarray:
         """(m,) int64 global suffix ids -> (m, K) windows at token offset
@@ -350,3 +355,103 @@ class CorpusStore:
         self.retries += act.size - served.size
         self.peak_windows = max(self.peak_windows, served.size)
         return win, ok
+
+
+class WindowCursor:
+    """Per-suffix progressive window cache over a :class:`CorpusStore`.
+
+    The k-way merge (``repro.core.superblock``) compares *run heads* over and
+    over: binary-search partition probes a run member against a splitter, and
+    every heap sift compares the two leading suffixes of two runs.  Without a
+    cache each comparison would re-fetch both windows from the store; with
+    this cursor a window is fetched **once per (suffix, K-token depth)** and
+    re-served from the cursor for every later comparison, so store traffic is
+    one depth-0 window per suffix plus deeper windows only down to actual
+    tie-breaking depth.
+
+    Fetches go through the owning store's batched APIs, so all byte/round
+    accounting stays in one place; the cursor only adds `cached_windows` /
+    `peak_cached_windows` (resident working-set accounting — released as
+    suffixes are emitted from the merge).
+    """
+
+    def __init__(self, store: CorpusStore):
+        self.store = store
+        self._win = {}  # gidx -> [window at depth 0, window at depth 1, ...]
+        self.cached_windows = 0
+        self.peak_cached_windows = 0
+
+    def prefetch(self, gidx: np.ndarray) -> None:
+        """Batch-fetch depth-0 windows for every uncached suffix in ``gidx``
+        (one capacity-chunked store round instead of per-comparison
+        singletons)."""
+        miss = np.array(
+            [g for g in np.asarray(gidx, np.int64).tolist() if g not in self._win],
+            np.int64,
+        )
+        if miss.size == 0:
+            return
+        wins = self.store.fetch_windows(miss, 0)
+        for i, g in enumerate(miss.tolist()):
+            self._win[g] = [wins[i]]
+        self.cached_windows += miss.size
+        self.peak_cached_windows = max(self.peak_cached_windows, self.cached_windows)
+
+    def window(self, gidx: int, depth: int) -> np.ndarray:
+        """The (K,) window of ``gidx`` at ``depth`` (cached; fetched on miss)."""
+        ws = self._win.get(gidx)
+        if ws is None:
+            ws = self._win[gidx] = []
+        while len(ws) <= depth:
+            ws.append(self.store.fetch_windows(
+                np.array([gidx], np.int64), len(ws))[0])
+            self.cached_windows += 1
+            self.peak_cached_windows = max(
+                self.peak_cached_windows, self.cached_windows)
+        return ws[depth]
+
+    def offer(self, gidx: int, depth: int, window: np.ndarray) -> None:
+        """Warm the cache with an externally fetched window (no store round).
+
+        Used by the host re-rank (``_refine_sort``) so windows it already
+        paid for are re-served to the k-way merge instead of re-fetched.
+        Depths must arrive consecutively per suffix; offers that would leave
+        a gap are ignored.
+        """
+        ws = self._win.get(gidx)
+        if ws is None:
+            if depth != 0:
+                return
+            self._win[gidx] = [window]
+        elif len(ws) == depth:
+            ws.append(window)
+        else:
+            return
+        self.cached_windows += 1
+        self.peak_cached_windows = max(self.peak_cached_windows, self.cached_windows)
+
+    def release(self, gidx: int) -> None:
+        """Drop a suffix's cached windows (call when the merge emits it)."""
+        ws = self._win.pop(gidx, None)
+        if ws is not None:
+            self.cached_windows -= len(ws)
+
+    def less(self, a: int, b: int) -> bool:
+        """Exact ``suffix(a) < suffix(b)``; equal contents tie by index.
+
+        Progressive K-token comparison against cached windows.  Equal windows
+        containing a ``0`` mean both suffixes ended at the same depth with
+        identical content — the global index breaks the tie (the oracle's
+        ``(suffix tokens..., index)`` order).
+        """
+        if a == b:
+            return False
+        for d in range(self.store.max_window_depth):
+            wa, wb = self.window(a, d), self.window(b, d)
+            neq = wa != wb
+            if neq.any():
+                j = int(np.argmax(neq))
+                return bool(wa[j] < wb[j])
+            if (wa == 0).any():
+                return a < b
+        raise RuntimeError("suffix comparison overran the window bound")

@@ -17,17 +17,27 @@ Phases (see :func:`build_suffix_array_superblock`):
    Text mode: they are *provisional* near the block tail (a comparison may
    depend on tokens past the block boundary) — which is why phase 3 ranks
    against the resident corpus rather than trusting block order blindly.
-3. **Merge via the store** — splitter suffixes are sampled from the
-   concatenated block SAs (evenly spaced picks over each block's sorted run
-   = per-block quantiles), ranked exactly, and every suffix is assigned a
-   merge bucket by batched window comparisons against the splitters served
-   from the resident :class:`~repro.core.store.CorpusStore` — *indexes move,
-   tokens stay put*.  Oversized buckets are split recursively (splitters are
-   member suffixes, so every split makes progress), guaranteeing that no
-   bucket — and therefore no run — materializes more than one superblock of
-   records.  Each bucket is then ranked by the same group-synchronous
-   window-refinement loop as the device reducer, and buckets concatenate
-   into the final SA.
+3. **Boundary-exact merge via the store** — the block SAs are treated as
+   what they are: already-sorted runs (exactly sorted in reads mode, exactly
+   sorted away from block tails in text mode).  Splitter suffixes sampled at
+   per-block quantiles are ranked exactly, then each splitter's rank inside
+   every run is located by **binary search** with O(log n) exact store
+   comparisons (:func:`repro.core.store.WindowCursor` caches each probed
+   window).  The resulting per-run segments of a bucket are **k-way merged**
+   at run heads, fetching comparison windows only to tie-breaking depth —
+   *indexes move, tokens stay put*, and no suffix is wholesale re-ranked.
+   Text mode first splits off the block-tail *risk set* (suffixes whose
+   block-local comparisons could have run past the block boundary) and
+   re-ranks only those; the rest ride the k-way path.  Oversized buckets are
+   split recursively (splitters are member suffixes, so every split makes
+   progress), guaranteeing that no bucket — and therefore no run —
+   materializes more than one superblock of records.
+
+   ``SuperblockConfig.merge_algorithm = "rerank"`` keeps the previous
+   wholesale re-ranking merge as the traffic baseline, and
+   ``merge_backend = "device"`` runs bucket refinement TPU-resident via
+   :class:`repro.core.pipeline.DeviceRefiner` (windows served by
+   ``mget_window`` under the same ``shard_map`` reducer as the pipeline).
 
 The peak number of records any single run held is reported in
 ``Footprint.peak_records`` and is bounded by ``plan.capacity_records`` — the
@@ -35,16 +45,17 @@ The peak number of records any single run held is reported in
 """
 from __future__ import annotations
 
+import heapq
 import math
 import warnings
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
 from repro.config import SAConfig, SuperblockConfig
-from repro.core.pipeline import build_suffix_array
-from repro.core.store import CorpusStore
+from repro.core.pipeline import DeviceRefiner, build_suffix_array
+from repro.core.store import CorpusStore, WindowCursor
 from repro.core.types import Footprint, SAResult
 
 
@@ -101,12 +112,25 @@ def plan_superblocks(
         for lo in range(0, items, per_block)
     )
     if 0 < sb.max_records_per_run < per_block * per_item:
-        warnings.warn(
-            f"max_records_per_run={sb.max_records_per_run} is below the "
-            f"granularity floor ({per_block * per_item} records per block); "
-            "peak per-run records will exceed the requested budget",
-            stacklevel=2,
-        )
+        if sb.num_superblocks > 0:
+            # the budget never shaped this plan: the explicit split overrode
+            # it, and that split's blocks are simply bigger than the budget.
+            warnings.warn(
+                f"max_records_per_run={sb.max_records_per_run} ignored: "
+                f"explicit num_superblocks={sb.num_superblocks} yields "
+                f"{per_block * per_item} records per block, over the budget",
+                stacklevel=2,
+            )
+        else:
+            # the budget drove the split but is unachievable: one item (one
+            # read / one token) already exceeds it.
+            warnings.warn(
+                f"max_records_per_run={sb.max_records_per_run} is below the "
+                f"granularity floor ({per_block * per_item} records per "
+                "block); peak per-run records will exceed the requested "
+                "budget",
+                stacklevel=2,
+            )
     return SuperblockPlan(
         text_mode=text_mode,
         total_records=total,
@@ -133,7 +157,9 @@ def _tied_np(g: np.ndarray) -> np.ndarray:
     return (g == prev) | (g == nxt)
 
 
-def _refine_sort(store: CorpusStore, gidx: np.ndarray) -> np.ndarray:
+def _refine_sort(
+    store: CorpusStore, gidx: np.ndarray, cursor: Optional[WindowCursor] = None
+) -> np.ndarray:
     """Rank ``gidx`` by exact suffix order with batched store fetches.
 
     The host port of the device reducer: sort by the first K-token window,
@@ -142,12 +168,19 @@ def _refine_sort(store: CorpusStore, gidx: np.ndarray) -> np.ndarray:
     final sort key — exactly the oracle's ``(suffix tokens..., index)``
     order.  Capacity overflow retries are group-synchronous: a tie group
     advances a window only when every active member was served.
+
+    ``cursor``: optional :class:`WindowCursor` to warm with every fetched
+    window, so a following k-way merge re-serves them from cache instead of
+    re-fetching (the text-mode risk re-rank path).
     """
     m = gidx.shape[0]
     if m <= 1:
         return gidx
     k = store.k
     win = store.fetch_windows(gidx, 0)
+    if cursor is not None:
+        for i in range(m):
+            cursor.offer(int(gidx[i]), 0, win[i])
     order = np.lexsort((gidx,) + tuple(win[:, j] for j in range(k - 1, -1, -1)))
     gidx, win = gidx[order], win[order]
     eq = np.concatenate([[False], (win[1:] == win[:-1]).all(axis=1)])
@@ -165,6 +198,9 @@ def _refine_sort(store: CorpusStore, gidx: np.ndarray) -> np.ndarray:
         if not active.any():
             break
         win, ok = store.mget_window_host(gidx, depth, active, g)
+        if cursor is not None:
+            for i in np.flatnonzero(active & ok):
+                cursor.offer(int(gidx[i]), int(depth[i]), win[i])
         # group-synchronous advance (mirrors the device while-loop body)
         member_ok = np.where(active, ok, True)
         starts = np.concatenate([[True], g[1:] != g[:-1]])
@@ -191,17 +227,24 @@ def _less_than(store: CorpusStore, gidx: np.ndarray, pivot: int) -> np.ndarray:
     """Exact ``suffix(gidx) < suffix(pivot)`` for a batch, ties by index.
 
     Progressive window comparison; fetched windows for at most one
-    capacity-chunk of suffixes are alive at any moment.
+    capacity-chunk of suffixes are alive at any moment.  The pivot's window
+    at each depth is fetched **once** and cached across capacity chunks —
+    re-fetching it per chunk would inflate the request/round accounting with
+    redundant singletons.
     """
     out = np.zeros(gidx.shape[0], bool)
     cap = store.request_capacity
+    cache = {}  # depth -> pivot window, shared by every chunk
     for clo in range(0, gidx.shape[0], cap):
         chunk = gidx[clo : clo + cap]
         res = np.zeros(chunk.shape[0], bool)
         undecided = np.ones(chunk.shape[0], bool)
         depth = 0
         while undecided.any():
-            wp = store.fetch_windows(np.array([pivot], np.int64), depth)[0]
+            wp = cache.get(depth)
+            if wp is None:
+                wp = store.fetch_windows(np.array([pivot], np.int64), depth)[0]
+                cache[depth] = wp
             sel = np.flatnonzero(undecided)
             ws = store.fetch_windows(chunk[sel], depth)
             neq = ws != wp[None, :]
@@ -233,26 +276,220 @@ def _partition(
 
 
 def _sorted_runs(
-    store: CorpusStore, gidx: np.ndarray, cap: int, samples_per_split: int
+    store: CorpusStore,
+    gidx: np.ndarray,
+    cap: int,
+    samples_per_split: int,
+    refine: Callable[[np.ndarray], np.ndarray],
 ) -> List[np.ndarray]:
     """Fully sort an interval of the true order, in pieces of <= cap records.
 
     Splitters are member suffixes at sample quantiles, so each part strictly
     shrinks and recursion terminates even on all-equal-content inputs (the
-    index tiebreak makes the order strict).
+    index tiebreak makes the order strict).  ``refine`` ranks a <= cap batch
+    exactly (host :func:`_refine_sort` or the device backend).
     """
     if gidx.size <= cap:
-        return [_refine_sort(store, gidx)]
+        return [refine(gidx)]
     nb = -(-gidx.size // cap) + 1
     # the sample pool is itself a run: keep it within the record bound
     take = min(gidx.size, cap, max(nb * samples_per_split, nb))
     pos = (np.arange(take, dtype=np.int64) * gidx.size) // take
-    sample = _refine_sort(store, gidx[pos])
+    sample = refine(gidx[pos])
     splitters = sample[[(i * sample.size) // nb for i in range(1, nb)]]
     out: List[np.ndarray] = []
     for part in _partition(store, gidx, np.unique(splitters)):
-        out.extend(_sorted_runs(store, part, cap, samples_per_split))
+        out.extend(_sorted_runs(store, part, cap, samples_per_split, refine))
     return out
+
+
+# ---------------------------------------------------------------------------
+# boundary-exact k-way merge of sorted block runs
+# ---------------------------------------------------------------------------
+
+
+def _rank_in_run(cur: WindowCursor, run: np.ndarray, splitter: int) -> int:
+    """Number of ``run`` members with suffix < splitter, by binary search.
+
+    ``run`` must be exactly sorted; each probe is one exact store comparison
+    (windows cached by the cursor), so locating a splitter costs O(log n)
+    comparisons instead of the linear scan of :func:`_less_than` over every
+    member.
+    """
+    lo, hi = 0, run.size
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if cur.less(int(run[mid]), splitter):
+            lo = mid + 1
+        else:
+            hi = mid
+    return lo
+
+
+def _partition_runs(
+    cur: WindowCursor, runs: List[np.ndarray], splitters: np.ndarray
+) -> List[List[np.ndarray]]:
+    """Cut every sorted run at the splitter ranks.
+
+    Returns ``buckets[b]`` = the per-run segments of merge bucket ``b``;
+    segments inherit exact sortedness from their runs, and every member of
+    bucket ``b`` precedes every member of bucket ``b+1`` in true suffix
+    order (splitters ascend).
+    """
+    nb = splitters.size + 1
+    buckets: List[List[np.ndarray]] = [[] for _ in range(nb)]
+    for run in runs:
+        cuts = [0]
+        for s in splitters:
+            cuts.append(max(_rank_in_run(cur, run, int(s)), cuts[-1]))
+        cuts.append(run.size)
+        for b in range(nb):
+            seg = run[cuts[b] : cuts[b + 1]]
+            if seg.size:
+                buckets[b].append(seg)
+    return buckets
+
+
+class _Head:
+    """Heap entry of the k-way merge: one run and its cursor position,
+    ordered by the exact suffix order of the current head element."""
+
+    __slots__ = ("cur", "run", "pos")
+
+    def __init__(self, cur: WindowCursor, run: np.ndarray):
+        self.cur = cur
+        self.run = run
+        self.pos = 0
+
+    @property
+    def gidx(self) -> int:
+        return int(self.run[self.pos])
+
+    def __lt__(self, other: "_Head") -> bool:
+        return self.cur.less(self.gidx, other.gidx)
+
+
+def _kway_merge(
+    cur: WindowCursor, runs: List[np.ndarray], release: bool = True
+) -> np.ndarray:
+    """Merge exactly-sorted runs with a heap of run heads.
+
+    Every member's depth-0 window is prefetched in one batched store round;
+    head-vs-head comparisons then hit the cursor cache and deepen only to
+    actual tie-breaking depth.  Emitted suffixes release their windows
+    (unless the caller wants them kept hot — splitter pools are re-probed by
+    the partition right after), so the resident working set shrinks as the
+    merge drains.
+    """
+    runs = [r for r in runs if r.size]
+    if not runs:
+        return np.zeros((0,), np.int64)
+    if len(runs) == 1:
+        return runs[0]
+    total = sum(r.size for r in runs)
+    cur.prefetch(np.concatenate(runs))
+    heap = [_Head(cur, r) for r in runs]
+    heapq.heapify(heap)
+    out = np.empty(total, np.int64)
+    i = 0
+    while heap:
+        h = heapq.heappop(heap)
+        g = h.gidx
+        out[i] = g
+        i += 1
+        if release:
+            cur.release(g)
+        h.pos += 1
+        if h.pos < h.run.size:
+            heapq.heappush(heap, h)
+    return out
+
+
+def _merge_runs(
+    cur: WindowCursor,
+    runs: List[np.ndarray],
+    cap: int,
+    samples_per_split: int,
+    rank_pool: Callable[[List[np.ndarray]], np.ndarray],
+) -> List[np.ndarray]:
+    """Merge exactly-sorted runs into <= cap pieces of the true order.
+
+    Buckets whose total fits the record bound are k-way merged directly;
+    oversized buckets recurse: splitters are member suffixes at per-run
+    quantiles, located inside every run by binary search, and — the index
+    tiebreak making suffix order strict — every split is guaranteed to shed
+    at least one member per side, so the recursion terminates even on
+    all-equal-content input.
+
+    ``rank_pool`` ranks the splitter sample (a list of per-run pick
+    subsequences, each inheriting exact sortedness from its run) — k-way
+    merged through the shared cursor, so the pool's windows are fetched once
+    and stay hot for the partition probes and the final bucket merges.
+    """
+    runs = [r for r in runs if r.size]
+    total = sum(r.size for r in runs)
+    if total == 0:
+        return []
+    if total <= cap:
+        return [_kway_merge(cur, runs)]
+    nb = -(-total // cap) + 1
+    take = min(total, cap, max(nb * samples_per_split, nb))
+    pos = (np.arange(take, dtype=np.int64) * total) // take
+    # evenly spaced picks over the concatenated runs = per-run quantiles;
+    # regroup them per run so each pick subsequence is itself a sorted run.
+    bounds = np.cumsum([0] + [r.size for r in runs])
+    pool_runs = []
+    for ri, run in enumerate(runs):
+        sel = pos[(pos >= bounds[ri]) & (pos < bounds[ri + 1])] - bounds[ri]
+        if sel.size:
+            pool_runs.append(run[sel])
+    pool = rank_pool(pool_runs)
+    picks = pool[[(i * pool.size) // nb for i in range(1, nb)]]
+    out: List[np.ndarray] = []
+    for segs in _partition_runs(cur, runs, picks):
+        sub_total = sum(s.size for s in segs)
+        if sub_total >= total:
+            raise RuntimeError("superblock k-way partition made no progress")
+        out.extend(_merge_runs(cur, segs, cap, samples_per_split, rank_pool))
+    return out
+
+
+def _split_boundary_risk(
+    plan: SuperblockPlan,
+    local_sas: List[np.ndarray],
+    block_stats: List[dict],
+    k: int,
+) -> Tuple[List[np.ndarray], np.ndarray]:
+    """Text mode: split each block's run into its exactly-sorted part and the
+    block-boundary *risk set*.
+
+    A text-mode block build compares suffixes against the block's own tokens
+    only, treating the block end as end-of-text.  A suffix whose comparisons
+    never ran past the boundary is ordered by genuine global tokens, so the
+    block-local order of those suffixes is globally exact.  The build
+    examines at most ``rounds * K`` tokens per suffix (``rounds`` is the max
+    refinement depth reported by the block's pipeline run), so suffixes
+    further than that from the block end are safe; the rest — and whole
+    blocks that hit the refinement hard cap (``unresolved > 0``) — must be
+    re-ranked against the resident store.  The final block ends at the true
+    text end: nothing in it is at risk.
+    """
+    runs: List[np.ndarray] = []
+    risk: List[np.ndarray] = []
+    last = len(plan.blocks) - 1
+    for bi, ((_, hi), sa_b) in enumerate(zip(plan.blocks, local_sas)):
+        if bi == last:
+            runs.append(sa_b)
+            continue
+        if block_stats[bi].get("unresolved", 0):
+            risk.append(sa_b)  # block order unproven: re-rank the whole block
+            continue
+        reach = block_stats[bi]["rounds"] * k
+        keep = (hi - sa_b) > reach
+        runs.append(sa_b[keep])
+        risk.append(sa_b[~keep])
+    riskv = np.concatenate(risk) if risk else np.zeros((0,), np.int64)
+    return [r for r in runs if r.size], riskv
 
 
 # ---------------------------------------------------------------------------
@@ -306,22 +543,88 @@ def build_suffix_array_superblock(
         fp.peak_records = max(fp.peak_records, res.stats["num_suffixes"])
         block_stats.append(res.stats)
 
-    # ---- phase 3: splitter-partitioned merge via the store -------------
-    # Concatenated block SAs: evenly spaced sample picks hit each block's
-    # sorted run systematically = per-block quantile candidates.
-    all_idx = np.concatenate(local_sas)
+    # ---- phase 3: boundary-exact merge via the store -------------------
+    if sb.merge_backend not in ("host", "device"):
+        raise ValueError(f"unknown merge_backend: {sb.merge_backend!r}")
+    if sb.merge_algorithm not in ("kway", "rerank"):
+        raise ValueError(f"unknown merge_algorithm: {sb.merge_algorithm!r}")
     samples = max(1, min(
         sb.samples_per_block,
         plan.capacity_records // plan.num_superblocks,
     ))
+    cap = plan.capacity_records
     pre_requests = store.requests
-    pieces = _sorted_runs(store, all_idx, plan.capacity_records, samples)
+
+    cur = WindowCursor(store)
+    refiner: Optional[DeviceRefiner] = None
+    if sb.merge_backend == "device":
+        refiner = DeviceRefiner(corpus, cfg, lengths=lengths, mesh=mesh)
+        refine = refiner.refine
+    else:
+        # kway: warm the merge cursor with every re-rank fetch so the k-way
+        # phase re-serves those windows instead of re-fetching them.
+        warm = cur if sb.merge_algorithm == "kway" else None
+
+        def refine(g: np.ndarray) -> np.ndarray:
+            return _refine_sort(store, g, cursor=warm)
+    if sb.merge_algorithm == "rerank":
+        # PR-1 baseline: every bucket re-ranked from scratch (block order is
+        # only used for splitter sampling).  Kept as the traffic reference.
+        pieces = _sorted_runs(store, np.concatenate(local_sas), cap, samples,
+                              refine)
+    else:
+        # Splitter pools are lists of already-sorted pick runs: cursor-merge
+        # them so their windows are fetched once and stay hot for the
+        # partition probes and bucket merges (cheaper than any re-rank, on
+        # either backend — the device refiner serves the true re-rank
+        # workloads: text-mode risk sets and the rerank algorithm).
+        def rank_pool(pool_runs: List[np.ndarray]) -> np.ndarray:
+            return _kway_merge(cur, pool_runs, release=False)
+
+        if plan.text_mode:
+            runs, risk = _split_boundary_risk(
+                plan, local_sas, block_stats, store.k
+            )
+            risk_pieces: List[np.ndarray] = []
+            if risk.size:
+                # the risk set is re-ranked into <= cap sorted pieces; each
+                # piece then joins the k-way merge as one more run.
+                risk_pieces = [
+                    p for p in _sorted_runs(store, risk, cap, samples, refine)
+                    if p.size
+                ]
+            if runs:
+                pieces = _merge_runs(
+                    cur, runs + risk_pieces, cap, samples, rank_pool
+                )
+            else:
+                # every suffix was at risk: the re-ranked pieces already are
+                # consecutive intervals of the true order — no merge needed.
+                pieces = risk_pieces
+        else:
+            # reads mode: block runs are exact as-is (suffixes never cross a
+            # read) — unless a block hit the refinement hard cap, in which
+            # case its order is unproven and it is re-ranked like a risk set.
+            runs, bad = [], []
+            for sa_b, st in zip(local_sas, block_stats):
+                (runs if st.get("unresolved", 0) == 0 else bad).append(sa_b)
+            if bad:
+                runs = runs + [
+                    p for p in _sorted_runs(
+                        store, np.concatenate(bad), cap, samples, refine)
+                    if p.size
+                ]
+            pieces = _merge_runs(cur, runs, cap, samples, rank_pool)
     sa = np.concatenate(pieces) if pieces else np.zeros((0,), np.int64)
 
-    fp.fetch_request += store.request_bytes
-    fp.fetch_response += store.response_bytes
+    dev_req = refiner.requests if refiner else 0
+    dev_req_bytes = refiner.request_bytes if refiner else 0
+    dev_resp_bytes = refiner.response_bytes if refiner else 0
+    fp.fetch_request += store.request_bytes + dev_req_bytes
+    fp.fetch_response += store.response_bytes + dev_resp_bytes
     fp.output = int(sa.shape[0]) * 8
     fp.peak_records = max(fp.peak_records, store.peak_windows,
+                          refiner.peak_records if refiner else 0,
                           max((p.size for p in pieces), default=0))
     fp.materialized = fp.peak_records * 16
 
@@ -331,13 +634,21 @@ def build_suffix_array_superblock(
         "superblocks": plan.num_superblocks,
         "capacity_records": plan.capacity_records,
         "peak_records": fp.peak_records,
+        "merge_algorithm": sb.merge_algorithm,
+        "merge_backend": sb.merge_backend,
         "merge_pieces": len(pieces),
         "max_piece": int(max((p.size for p in pieces), default=0)),
-        "merge_fetch_requests": int(store.requests - pre_requests),
-        # store counters are merge-only (the store serves no phase-2 fetch)
-        "merge_fetch_bytes": int(store.request_bytes + store.response_bytes),
-        "merge_fetch_rounds": int(store.rounds),
+        "merge_fetch_requests": int(store.requests - pre_requests) + dev_req,
+        # store + device-refiner counters are merge-only (neither serves any
+        # phase-2 fetch)
+        "merge_fetch_bytes": int(
+            store.request_bytes + store.response_bytes
+            + dev_req_bytes + dev_resp_bytes
+        ),
+        "merge_fetch_rounds": int(store.rounds)
+        + (refiner.rounds if refiner else 0),
         "merge_retries": int(store.retries),
+        "merge_cursor_peak_windows": cur.peak_cached_windows,
         "block_rounds": [s["rounds"] for s in block_stats],
         "dropped": fp.dropped,
         "unresolved": sum(s["unresolved"] for s in block_stats),

@@ -215,7 +215,6 @@ def run_sa_dryrun(multi_pod: bool):
     corpus_shape = (reads_per_shard * d, l)
     jitted, info = make_pipeline(corpus_shape, cfg, mesh)
     rows = info["rows_per_shard"]
-    k = cfg.prefix_len
     data = jax.ShapeDtypeStruct((d * rows, l), np.int32)
     lens = jax.ShapeDtypeStruct((d * rows,), np.int32)
     halo = jax.ShapeDtypeStruct((d,), np.int32)

@@ -35,6 +35,13 @@ def main():
     ap.add_argument("--max-records-per-run", type=int, default=0,
                     help="per-run suffix-record budget; exceeding corpora "
                          "build out-of-core (0 = unbounded, single-pass)")
+    ap.add_argument("--merge-backend", choices=["host", "device"],
+                    default="host",
+                    help="where out-of-core merge buckets are refined")
+    ap.add_argument("--merge-algorithm", choices=["kway", "rerank"],
+                    default="kway",
+                    help="out-of-core merge: boundary-exact k-way (default) "
+                         "or the wholesale re-rank baseline")
     args = ap.parse_args()
 
     import numpy as np
@@ -43,7 +50,11 @@ def main():
     from repro.core.prefix_doubling import build_suffix_array_doubling
     from repro.core.superblock import build_suffix_array_auto, plan_superblocks
     from repro.core.terasort import build_suffix_array_terasort
-    from repro.data.corpus import synth_dna_reads, synth_token_corpus
+    from repro.data.corpus import (
+        flatten_reads_with_separators,
+        synth_dna_reads,
+        synth_token_corpus,
+    )
 
     cfg = SAConfig(vocab_size=4, packing=args.packing, samples_per_shard=512)
     if args.text:
@@ -55,13 +66,20 @@ def main():
     sb = SuperblockConfig(
         num_superblocks=args.superblocks,
         max_records_per_run=args.max_records_per_run,
+        merge_backend=args.merge_backend,
+        merge_algorithm=args.merge_algorithm,
     )
 
     t0 = time.perf_counter()
     if args.mode == "terasort":
         res = build_suffix_array_terasort(corpus, cfg=cfg)
     elif args.mode == "doubling":
-        res = build_suffix_array_doubling(corpus.reshape(-1), cfg=cfg)
+        # a reads corpus must keep its read boundaries: separate the reads
+        # with $ tokens so no suffix comparison spans a read and the result
+        # is comparable to scheme/terasort on the same corpus.
+        flat = (corpus if args.text
+                else flatten_reads_with_separators(corpus))
+        res = build_suffix_array_doubling(flat, cfg=cfg)
     else:
         plan = plan_superblocks(np.shape(corpus), cfg, sb)
         if plan.num_superblocks > 1:

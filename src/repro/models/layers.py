@@ -104,7 +104,6 @@ def _headnorm(x, scale, eps):
 def _sdpa(q, k, v, mask, a: AttentionConfig):
     """q: (B,S,H,hd)  k,v: (B,T,KV,hd)  mask: (B|1, S, T) bool."""
     b, s, h, hd = q.shape
-    t = k.shape[1]
     kvh = k.shape[2]
     group = h // kvh
     qg = q.reshape(b, s, kvh, group, hd)

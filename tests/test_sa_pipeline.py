@@ -129,6 +129,48 @@ def test_doubling_pathological_beats_scheme_rounds():
     assert dbl.stats["rounds"] < scheme.stats["rounds"]
 
 
+def test_doubling_on_reads_uses_separators():
+    """Regression (ISSUE 2): flattening a reads corpus for the doubling
+    builder must insert $ separators — a bare ``reshape(-1)`` lets suffixes
+    span read boundaries, so patterns straddling two reads are "found" and
+    the result is not comparable to the reads-mode pipelines."""
+    from repro.core.search import count_occurrences
+    from repro.data.corpus import flatten_reads_with_separators
+
+    rng = np.random.default_rng(11)
+    reads = rng.integers(1, 5, size=(20, 6)).astype(np.int32)
+    flat = flatten_reads_with_separators(reads)
+    assert flat.shape == (20 * 7,)
+    # the separated stream is still an exact SA build
+    res = build_suffix_array_doubling(flat, cfg=CFG_DNA)
+    np.testing.assert_array_equal(res.suffix_array, doubling_sa_text(flat))
+
+    # a pattern spanning a read boundary exists in the bare flattening but
+    # must NOT be found in the separated stream
+    bare = reads.reshape(-1)
+    bres = build_suffix_array_doubling(bare, cfg=CFG_DNA)
+    spanning = reads[np.arange(2), [-1, 0]]  # last token of read 0 + first of read 1
+    assert count_occurrences(bare, bres.suffix_array, spanning) >= 1
+    # in-read counts agree with the read-set semantics for every 2-gram
+    for pat in ([1, 2], [3, 4], list(spanning)):
+        want = sum(
+            1
+            for r in range(reads.shape[0])
+            for o in range(reads.shape[1] - 1)
+            if list(reads[r, o : o + 2]) == list(pat)
+        )
+        assert count_occurrences(flat, res.suffix_array, pat) == want
+
+
+def test_flatten_reads_with_separators_variable_lengths():
+    from repro.data.corpus import flatten_reads_with_separators
+
+    reads = np.array([[1, 2, 3], [4, 0, 0]], np.int32)
+    lens = np.array([3, 1], np.int32)
+    got = flatten_reads_with_separators(reads, lens)
+    np.testing.assert_array_equal(got, [1, 2, 3, 0, 4, 0])
+
+
 def test_lcp_kasai_matches_naive():
     rng = np.random.default_rng(9)
     text = rng.integers(1, 5, size=(120,)).astype(np.int32)

@@ -1,0 +1,105 @@
+"""`repro.core.search` vs brute-force oracles (hypothesis via the compat shim).
+
+Satellite coverage (ISSUE 2): absent patterns, patterns longer than a read,
+and patterns ending exactly at a read tail — the binary-search boundary
+cases.  SAs come from the host oracles so each example is cheap; the search
+functions are the unit under test.
+"""
+import math
+
+import numpy as np
+from _hypothesis_compat import given, settings, st
+
+from repro.core.oracle import naive_sa_reads, naive_sa_text
+from repro.core.search import (
+    align_reads,
+    count_occurrences,
+    find_occurrences,
+    search_text,
+)
+
+
+def _brute_text(text: np.ndarray, pat: np.ndarray):
+    p = len(pat)
+    return sorted(
+        i for i in range(len(text)) if list(text[i : i + p]) == list(pat)
+    )
+
+
+def _brute_reads(reads: np.ndarray, pat: np.ndarray):
+    r, l = reads.shape
+    p = len(pat)
+    return sorted(
+        (i, o)
+        for i in range(r)
+        for o in range(l)
+        if list(reads[i, o : o + p]) == list(pat)
+    )
+
+
+@given(
+    data=st.lists(st.integers(1, 3), min_size=1, max_size=80),
+    pat=st.lists(st.integers(1, 3), min_size=1, max_size=6),
+)
+@settings(max_examples=40, deadline=None)
+def test_property_search_text_matches_bruteforce(data, pat):
+    text = np.array(data, np.int32)
+    pattern = np.array(pat, np.int32)
+    sa = naive_sa_text(text)
+    want = _brute_text(text, pattern)
+    lo, hi = search_text(text, sa, pattern)
+    assert hi - lo == len(want)
+    assert count_occurrences(text, sa, pattern) == len(want)
+    assert find_occurrences(text, sa, pattern) == want
+
+
+@given(
+    r=st.integers(1, 10),
+    l=st.integers(1, 9),
+    plen=st.integers(1, 12),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=40, deadline=None)
+def test_property_align_reads_matches_bruteforce(r, l, plen, seed):
+    """Random reads and patterns: present, absent, and longer-than-a-read
+    patterns all fall out of the random draws (plen may exceed l)."""
+    rng = np.random.default_rng(seed)
+    reads = rng.integers(1, 5, size=(r, l)).astype(np.int32)
+    pattern = rng.integers(1, 5, size=(plen,)).astype(np.int32)
+    sb = int(math.ceil(math.log2(l + 1)))
+    sa = naive_sa_reads(reads, stride_bits=sb)
+    got = align_reads(reads, sa, sb, pattern)
+    assert got == _brute_reads(reads, pattern)
+
+
+def test_search_text_absent_pattern_token():
+    """A pattern containing a token absent from the text matches nothing."""
+    text = np.array([1, 2, 1, 2, 1], np.int32)
+    sa = naive_sa_text(text)
+    assert count_occurrences(text, sa, [1, 3]) == 0
+    assert find_occurrences(text, sa, [3]) == []
+
+
+def test_align_reads_pattern_longer_than_read():
+    """A real-token pattern longer than any read can never match: suffixes
+    zero-pad past the read end and 0 matches no token >= 1."""
+    rng = np.random.default_rng(7)
+    reads = rng.integers(1, 5, size=(12, 6)).astype(np.int32)
+    sb = int(math.ceil(math.log2(reads.shape[1] + 1)))
+    sa = naive_sa_reads(reads, stride_bits=sb)
+    pattern = np.concatenate([reads[3], np.array([1], np.int32)])  # len L+1
+    assert align_reads(reads, sa, sb, pattern) == []
+
+
+def test_align_reads_pattern_ending_at_read_tail():
+    """A pattern equal to a read's tail must be found at exactly that offset
+    (the suffix ends where the pattern ends — no padding mismatch)."""
+    rng = np.random.default_rng(8)
+    reads = rng.integers(1, 5, size=(10, 8)).astype(np.int32)
+    sb = int(math.ceil(math.log2(reads.shape[1] + 1)))
+    sa = naive_sa_reads(reads, stride_bits=sb)
+    for p in (1, 3, 8):
+        pattern = reads[4, 8 - p :]
+        got = align_reads(reads, sa, sb, pattern)
+        assert (4, 8 - p) in got
+        assert got == _brute_reads(reads, pattern)

@@ -5,12 +5,22 @@ reproduce the oracle suffix array exactly on random *and* highly repetitive
 (ATAT...) corpora, in both reads mode and long-text mode, while the peak
 per-run record footprint stays bounded by one superblock (checked through
 the ``Footprint`` accounting).
+
+ISSUE 2 adds the boundary-exact merge: the k-way path must stay oracle-exact
+on the same corpora while moving >= 3x fewer merge-fetch bytes than the
+re-rank baseline at equal config, on the host and device merge backends
+alike; ``plan_superblocks`` must warn with the correct cause; and
+``_less_than`` must not re-fetch pivot windows per capacity chunk.
 """
+import warnings
+
 import numpy as np
 
 from repro.config import SAConfig, SuperblockConfig
 from repro.core.oracle import doubling_sa_text, naive_sa_reads, naive_sa_text
+from repro.core.store import CorpusStore
 from repro.core.superblock import (
+    _less_than,
     build_suffix_array_auto,
     build_suffix_array_superblock,
     plan_superblocks,
@@ -98,6 +108,136 @@ def test_capacity_retries_stay_exact():
     res = build_suffix_array_superblock(text, cfg=CFG, sb=sb)
     np.testing.assert_array_equal(res.suffix_array, naive_sa_text(text))
     assert res.stats["merge_retries"] > 0  # the path was actually exercised
+
+
+def test_plan_warns_budget_ignored_by_explicit_split():
+    """An explicit num_superblocks overrides the budget: the warning must
+    name the override, not the granularity floor (no floor is involved —
+    two blocks of (48, 12) are 312 records each, well above one row)."""
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        plan_superblocks(
+            (48, 12), CFG,
+            SuperblockConfig(num_superblocks=2, max_records_per_run=100),
+        )
+    assert len(w) == 1
+    msg = str(w[0].message)
+    assert "ignored" in msg and "num_superblocks=2" in msg
+    assert "granularity floor" not in msg
+
+
+def test_plan_warns_granularity_floor():
+    """A budget below one item's records is unachievable: floor warning."""
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        plan = plan_superblocks(
+            (10, 12), CFG, SuperblockConfig(max_records_per_run=5)
+        )
+    assert len(w) == 1
+    msg = str(w[0].message)
+    assert "granularity floor" in msg and "ignored" not in msg
+    assert plan.capacity_records == 13  # one row per block: the true floor
+
+
+def test_plan_achievable_budget_never_warns():
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        plan_superblocks((48, 12), CFG, SuperblockConfig(max_records_per_run=200))
+        # explicit split whose blocks fit the budget: also silent
+        plan_superblocks(
+            (48, 12), CFG,
+            SuperblockConfig(num_superblocks=8, max_records_per_run=200),
+        )
+    assert not w
+
+
+def _merge_bytes(corpus, sb, lengths=None):
+    res = build_suffix_array_superblock(corpus, lengths=lengths, cfg=CFG, sb=sb)
+    return res, res.stats["merge_fetch_bytes"]
+
+
+def test_kway_merge_traffic_beats_rerank_3x_random():
+    """The acceptance ratio: boundary-exact k-way vs the PR-1 re-rank merge
+    at equal SuperblockConfig, >= 3 superblocks, random reads."""
+    rng = np.random.default_rng(0)
+    reads = rng.integers(1, 5, size=(48, 12)).astype(np.int32)
+    ref = naive_sa_reads(reads)
+    kway, b_kway = _merge_bytes(reads, SuperblockConfig(num_superblocks=4))
+    rerank, b_rerank = _merge_bytes(
+        reads, SuperblockConfig(num_superblocks=4, merge_algorithm="rerank")
+    )
+    np.testing.assert_array_equal(kway.suffix_array, ref)
+    np.testing.assert_array_equal(rerank.suffix_array, ref)
+    assert b_rerank >= 3 * b_kway, (b_kway, b_rerank)
+
+
+def test_kway_merge_traffic_beats_rerank_3x_repetitive():
+    """Same ratio on the worst case: identical ATAT reads, every comparison
+    a deep tie broken only by index."""
+    reads = np.tile(np.array([1, 2] * 6, np.int32), (36, 1))
+    ref = naive_sa_reads(reads)
+    kway, b_kway = _merge_bytes(reads, SuperblockConfig(num_superblocks=3))
+    rerank, b_rerank = _merge_bytes(
+        reads, SuperblockConfig(num_superblocks=3, merge_algorithm="rerank")
+    )
+    np.testing.assert_array_equal(kway.suffix_array, ref)
+    np.testing.assert_array_equal(rerank.suffix_array, ref)
+    assert b_rerank >= 3 * b_kway, (b_kway, b_rerank)
+
+
+def test_device_backend_reads_random_and_repetitive():
+    """merge_backend="device": oracle-exact, capacity bound preserved, and
+    the same >= 3x traffic win as the host backend."""
+    rng = np.random.default_rng(5)
+    for corpus in (
+        rng.integers(1, 5, size=(48, 12)).astype(np.int32),
+        np.tile(np.array([1, 2] * 6, np.int32), (36, 1)),
+    ):
+        sb = SuperblockConfig(num_superblocks=3, merge_backend="device")
+        res, b_kway = _merge_bytes(corpus, sb)
+        np.testing.assert_array_equal(res.suffix_array, naive_sa_reads(corpus))
+        _check_bounded(res, plan_superblocks(corpus.shape, CFG, sb))
+        _, b_rerank = _merge_bytes(corpus, SuperblockConfig(
+            num_superblocks=3, merge_backend="device",
+            merge_algorithm="rerank"))
+        assert b_rerank >= 3 * b_kway, (b_kway, b_rerank)
+
+
+def test_device_backend_text_modes():
+    """Device backend in text mode: the boundary risk set (and the rerank
+    algorithm's buckets) are ranked by the device refiner."""
+    rng = np.random.default_rng(6)
+    text = rng.integers(1, 5, size=(480,)).astype(np.int32)
+    rep = np.tile(np.array([1, 2], np.int32), 120)
+    for corpus, oracle in ((text, doubling_sa_text(text)),
+                           (rep, naive_sa_text(rep))):
+        for alg in ("kway", "rerank"):
+            sb = SuperblockConfig(num_superblocks=3, merge_backend="device",
+                                  merge_algorithm=alg)
+            res = build_suffix_array_superblock(corpus, cfg=CFG, sb=sb)
+            np.testing.assert_array_equal(res.suffix_array, oracle)
+            _check_bounded(res, plan_superblocks(corpus.shape, CFG, sb))
+
+
+def test_less_than_pivot_window_cached_across_chunks():
+    """Pivot windows must be fetched once per depth, not once per capacity
+    chunk: the request count is identical whether the batch fits one chunk
+    or is split into several."""
+    text = np.ones(20, np.int32)  # all-equal: comparisons go deep
+    gidx = np.arange(1, 9, dtype=np.int64)
+
+    one_chunk = CorpusStore(text, CFG, request_capacity=64)
+    res_big = _less_than(one_chunk, gidx, 0)
+    chunked = CorpusStore(text, CFG, request_capacity=4)
+    res_small = _less_than(chunked, gidx, 0)
+
+    # suffix(i) is a proper prefix of suffix(0) for i >= 1: all less
+    assert res_big.all() and res_small.all()
+    # elements 1..4 decide at depth 4 (5 windows), 5..8 at depth 3 (4), and
+    # the pivot is probed at depths 0..4 exactly once each: 4*5 + 4*4 + 5
+    assert one_chunk.requests == 41
+    assert chunked.requests == 41  # no per-chunk pivot re-fetch
+    assert chunked.request_bytes == one_chunk.request_bytes
 
 
 def test_auto_routes_by_budget():
