@@ -22,6 +22,8 @@ def main() -> None:
         "throughput": throughput.run,        # §IV-D breakdown + variants
         # out-of-core superblock smoke (exercised, not timed, under CI)
         "superblock": scaling.run_out_of_core,
+        # disk-streamed store backend smoke (SA equality + residency bound)
+        "streaming": scaling.run_streaming,
     }
     pick = sys.argv[1:] or list(sections)
     t0 = time.time()

@@ -33,7 +33,7 @@ pos = jnp.asarray(prompt_lens.astype(np.int32))
 last = logits[jnp.arange(B), pos - 1]  # logits at each prompt's last token
 out_tokens = [[] for _ in range(B)]
 decode = jax.jit(model.decode_step)
-for step in range(GEN):
+for _step in range(GEN):
     nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
     for i in range(B):
         out_tokens[i].append(int(nxt[i]))

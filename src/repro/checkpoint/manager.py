@@ -139,7 +139,7 @@ class CheckpointManager:
             [None] * len(leaves)
         )
         out = []
-        for i, (ref, sh) in enumerate(zip(leaves, shard_leaves)):
+        for i, (ref, sh) in enumerate(zip(leaves, shard_leaves, strict=True)):
             with open(os.path.join(path, f"arr_{i}.bin"), "rb") as f:
                 raw = f.read()
             arr = np.frombuffer(

@@ -340,6 +340,28 @@ class SuperblockConfig:
       * ``"device"`` — the refinement loop runs TPU-resident under the same
         ``shard_map`` reducer as the pipeline, windows served by
         ``mget_window`` (``repro.core.pipeline.DeviceRefiner``).
+    ``store_backend``: where the merge store's corpus bytes live.
+      * ``"memory"`` (default) — host-resident array
+        (``repro.core.store.InMemoryBackend``; out-of-*device* only).
+      * ``"chunked"`` — chunked on-disk file + budgeted LRU chunk cache
+        (``ChunkedFileBackend``): host-resident *corpus* bytes bounded by
+        ``cache_budget_bytes``, so the corpus may exceed host RAM.  Block
+        SAs are spilled to disk and the k-way merge runs with a bounded
+        read-ahead frontier.  The final suffix array itself (8 B/suffix)
+        is still returned as one host array — the remaining host ceiling
+        (ROADMAP follow-up).  Requires ``merge_backend="host"`` (the
+        device refiner needs the corpus HBM-resident).
+    ``chunk_records``: corpus items (reads-mode rows / text tokens) per
+      on-disk chunk when this build serializes the corpus itself; 0 derives
+      ``repro.data.chunk_store.default_chunk_items`` (existing corpus files
+      keep their own chunking).
+    ``cache_budget_bytes``: resident-byte budget of the chunked backend's
+      LRU chunk cache; the merge frontier read-ahead is sized from the same
+      budget, and ``Footprint.peak_resident_bytes`` (cache + frontier) is
+      bounded by it.  0 = 64 MiB default.
+    ``spill_dir``: directory for the chunked build's scratch files (the
+      serialized corpus when given an array, per-block SA spills); None = a
+      private temporary directory, removed when the build finishes.
     """
 
     max_records_per_run: int = 0
@@ -348,6 +370,10 @@ class SuperblockConfig:
     request_capacity: int = 4096
     merge_algorithm: str = "kway"
     merge_backend: str = "host"
+    store_backend: str = "memory"
+    chunk_records: int = 0
+    cache_budget_bytes: int = 0
+    spill_dir: Optional[str] = None
 
 
 # ---------------------------------------------------------------------------

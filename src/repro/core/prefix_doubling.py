@@ -239,7 +239,7 @@ def build_suffix_array_doubling(
     n = text.shape[0]
     max_rounds = int(math.ceil(math.log2(max(n, 2)))) + 2
     slack = cfg.shuffle_slack
-    for attempt in range(7):
+    for _attempt in range(7):
         # capacity per destination bucket
         shuffle_cap = max(1, int(math.ceil(info["rows_per_shard"] * slack / d)))
         fetch_cap = max(1, int(math.ceil(d * shuffle_cap * slack / d)))

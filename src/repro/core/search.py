@@ -24,7 +24,7 @@ def _suffix_tokens_text(text: np.ndarray, pos: int, k: int) -> np.ndarray:
 def _cmp_pattern(text: np.ndarray, pos: int, pat: np.ndarray) -> int:
     """-1 if suffix < pat, 0 if pat is a prefix of suffix, +1 if suffix > pat."""
     w = _suffix_tokens_text(text, int(pos), len(pat))
-    for a, b in zip(w, pat):
+    for a, b in zip(w, pat, strict=True):
         if a < b:
             return -1
         if a > b:
@@ -80,7 +80,7 @@ def align_reads(
         w = reads[row, off : off + len(pat)]
         if len(w) < len(pat):
             w = np.concatenate([w, np.zeros(len(pat) - len(w), reads.dtype)])
-        for a, b in zip(w, pat):
+        for a, b in zip(w, pat, strict=True):
             if a < b:
                 return -1
             if a > b:

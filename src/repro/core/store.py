@@ -17,6 +17,7 @@ All methods are *per-device* functions meant to be called inside ``shard_map``.
 from __future__ import annotations
 
 import math
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Optional, Tuple
 
@@ -27,7 +28,29 @@ from jax import lax
 from repro.config import SAConfig
 from repro.core import encoding
 from repro.core.distributed import bucket_scatter, exchange
-from repro.core.types import KEY_SENTINEL
+from repro.core.types import WORD_BITS, KEY_SENTINEL
+
+
+# Default resident-byte budget of the chunked store backend (LRU chunk
+# cache + merge frontier share it; see superblock._build_superblock).
+DEFAULT_CACHE_BUDGET = 64 << 20
+
+
+def index_request_bytes(num_items: int, stride_bits: int) -> int:
+    """Modeled bytes of one suffix-index request.
+
+    An index addresses ``(item, offset)`` packed as ``item << stride | off``
+    (``repro.core.types``) and needs int31 words carried in int32 lanes —
+    one word while the address space fits 31 bits, two beyond.  The paper
+    ships a fixed 8-byte long; deriving the width from the store geometry
+    keeps request-byte accounting exact for small stores and for both index
+    packings (single-word text positions vs two-word read/offset pairs).
+    This is the *effective* figure: the device path's padded all_to_all
+    still physically carries two int32 lanes per slot, reported separately
+    in ``FetchStats.padded_request_bytes``.
+    """
+    bits = max(1, (max(num_items - 1, 1)).bit_length() + stride_bits)
+    return 4 * -(-bits // WORD_BITS)
 
 
 @dataclass(frozen=True)
@@ -43,6 +66,13 @@ class StoreSpec:
     @property
     def is_text(self) -> bool:
         return self.row_len == 1
+
+    @property
+    def index_bytes(self) -> int:
+        """Modeled per-request index bytes, derived — not a hard-coded 8 B
+        (see :func:`index_request_bytes`)."""
+        stride = 0 if self.is_text else int(math.ceil(math.log2(self.row_len + 1)))
+        return index_request_bytes(self.num_shards * self.rows_per_shard, stride)
 
 
 @dataclass
@@ -148,9 +178,13 @@ def mget_window(
     exhausted = jnp.where(ok, back[:, resp_width] > 0, True)
 
     n_ok = jnp.sum(ok).astype(jnp.int32)
+    # request_bytes: the modeled mgetsuffix index width (spec.index_bytes,
+    # derived from the address space; the paper ships one 8-byte long).
+    # padded_request_bytes: the physical all_to_all capacity — every slot
+    # carries 2 int32 lanes regardless of how few bits the index needs.
     stats = FetchStats(
         requests=n_ok,
-        request_bytes=n_ok * 8,  # 2 int32 words per index (paper: one long)
+        request_bytes=n_ok * spec.index_bytes,
         response_bytes=n_ok * per_resp_bytes,
         padded_request_bytes=d * cap * 8,
         padded_response_bytes=d * cap * per_resp_bytes,
@@ -232,62 +266,94 @@ def scatter_update(
 
 
 # ---------------------------------------------------------------------------
-# Cross-superblock store (out-of-core merge path, core/superblock.py)
+# Store backends: where the corpus bytes actually live
 # ---------------------------------------------------------------------------
 
 
-class CorpusStore:
-    """Resident-corpus window server for cross-superblock fetches.
+class StoreBackend:
+    """Protocol for the raw-token substrate behind :class:`CorpusStore`.
 
-    During the out-of-core merge (``repro.core.superblock``) a run only holds
-    one superblock of 16-byte records; comparisons against suffixes of *other*
-    superblocks are answered by this store — the same "raw data stays put,
-    indexes move" discipline as :func:`mget_window`, host-resident instead of
-    HBM-resident.  The capacity/retry semantics mirror the device path:
+    A backend owns the corpus *bytes* and answers exact window gathers; the
+    store on top owns capacity/retry semantics and traffic accounting.  Two
+    residency regimes implement it:
 
-    * at most ``request_capacity`` requests are served per call;
-    * :meth:`mget_window_host` serves **whole tie groups** in order (an
-      oversized leading group is served alone so rounds always progress) and
-      reports unserved actives for the caller's group-synchronous retry;
-    * byte accounting matches :class:`FetchStats` (8 B per index request,
-      ``K * token_bytes`` per raw-window response).
+    * :class:`InMemoryBackend` — the whole corpus host-resident (the PR-1/2
+      behavior; ``resident_bytes`` == corpus bytes, constant);
+    * :class:`ChunkedFileBackend` — corpus on disk in the chunked format
+      (``repro.data.chunk_store``), an LRU chunk cache bounded by
+      ``cache_budget_bytes`` the only resident copy.
+
+    Shared geometry (set by :meth:`_init_geometry`): ``text_mode``, ``n``
+    (items), ``row_len``, ``stride_bits``, ``max_len``, ``k``.  Subclasses
+    implement :meth:`gather` (exact (m, K) windows for global suffix ids at a
+    K-token depth) and :meth:`read_items` (materialize a contiguous item
+    range — the superblock build's per-block staging, *not* cached).
     """
 
-    def __init__(self, corpus, cfg: SAConfig, request_capacity: int = 4096):
-        corpus = np.asarray(corpus, np.int32)
-        self.text_mode = corpus.ndim == 1
+    def _init_geometry(self, text_mode: bool, items: int, row_len: int,
+                       cfg: SAConfig) -> None:
+        self.text_mode = text_mode
+        self.n = items
+        self.row_len = row_len
         self.k = cfg.prefix_len
-        self.request_capacity = max(1, int(request_capacity))
-        self.token_bytes = token_bytes(cfg.vocab_size)
-        if self.text_mode:
-            self.n = corpus.shape[0]
+        if text_mode:
             self.stride_bits = 0
-            self.max_len = self.n
-            self._flat = np.concatenate([corpus, np.zeros(self.k, np.int32)])
+            self.max_len = items
         else:
-            r, l = corpus.shape
-            self.n = r
-            self.stride_bits = int(math.ceil(math.log2(l + 1)))
-            self.max_len = l + 1
-            self._rows = np.pad(corpus, ((0, 0), (0, self.k)))
-        # fetch accounting (read by the superblock merge's Footprint)
-        self.requests = 0
-        self.request_bytes = 0
-        self.response_bytes = 0
-        self.retries = 0
-        self.rounds = 0
-        self.peak_windows = 0
+            self.stride_bits = int(math.ceil(math.log2(row_len + 1)))
+            self.max_len = row_len + 1
+        self.corpus_bytes = items * row_len * 4  # int32 lanes
+        self.cache_hits = 0
+        self.cache_misses = 0
 
     @property
-    def max_window_depth(self) -> int:
-        """Upper bound on K-token windows any suffix comparison can consume
-        (one extra all-zero window past the end resolves exhaustion)."""
-        return -(-self.max_len // self.k) + 2
+    def shape(self) -> Tuple[int, ...]:
+        return (self.n,) if self.text_mode else (self.n, self.row_len)
 
-    # -- raw gather ---------------------------------------------------------
-    def _gather(self, gidx: np.ndarray, depth: np.ndarray) -> np.ndarray:
+    @property
+    def resident_bytes(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 1.0
+
+    def gather(self, gidx: np.ndarray, depth: np.ndarray) -> np.ndarray:
         """(m,) int64 global suffix ids -> (m, K) windows at token offset
         ``depth * K`` into each suffix (0-padded past the end)."""
+        raise NotImplementedError
+
+    def read_items(self, lo: int, hi: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def close(self) -> None:  # noqa: B027 — optional hook, default no-op
+        pass
+
+
+class InMemoryBackend(StoreBackend):
+    """Whole-corpus host-resident backend (the original CorpusStore body)."""
+
+    def __init__(self, corpus, cfg: SAConfig):
+        corpus = np.asarray(corpus, np.int32)
+        text_mode = corpus.ndim == 1
+        if text_mode:
+            items, row_len = corpus.shape[0], 1
+        else:
+            items, row_len = corpus.shape
+        self._init_geometry(text_mode, items, row_len, cfg)
+        self._corpus = corpus
+        if text_mode:
+            self._flat = np.concatenate([corpus, np.zeros(self.k, np.int32)])
+        else:
+            self._rows = np.pad(corpus, ((0, 0), (0, self.k)))
+
+    @property
+    def resident_bytes(self) -> int:
+        return int((self._flat if self.text_mode else self._rows).nbytes)
+
+    def gather(self, gidx: np.ndarray, depth: np.ndarray) -> np.ndarray:
+        self.cache_hits += int(gidx.shape[0])  # always resident
         if self.text_mode:
             pos = np.minimum(gidx + depth * self.k, self.n)
             cols = pos[:, None] + np.arange(self.k)[None, :]
@@ -297,6 +363,187 @@ class CorpusStore:
         off = np.minimum(off + depth * self.k, self.max_len - 1)
         cols = off[:, None] + np.arange(self.k)[None, :]
         return self._rows[row[:, None], cols]
+
+    def read_items(self, lo: int, hi: int) -> np.ndarray:
+        return self._corpus[lo:hi]
+
+
+class ChunkedFileBackend(StoreBackend):
+    """Disk-resident backend: chunked corpus file + budgeted LRU chunk cache.
+
+    The corpus lives in the ``repro.data.chunk_store`` on-disk format and
+    only cached chunks are host-resident: ``resident_bytes`` is the exact sum
+    of cached chunk array bytes and never exceeds ``cache_budget_bytes``
+    (eviction runs *before* a miss loads, so the bound holds at every
+    instant).  Text-mode chunks carry a K-token halo so windows straddling a
+    chunk edge are served from one chunk exactly; reads-mode rows are atomic
+    within a chunk by construction.  ``read_items`` streams straight from
+    the file (pread) without touching the cache — per-superblock staging is
+    transient and must not evict the merge's working set.
+    """
+
+    def __init__(self, path: str, cfg: SAConfig, cache_budget_bytes: int = 0):
+        from repro.data.chunk_store import ChunkedCorpusReader
+
+        self._reader = ChunkedCorpusReader(path)
+        meta = self._reader.meta
+        self._init_geometry(meta.text_mode, meta.items, meta.row_len, cfg)
+        self.path = path
+        self.chunk_items = meta.chunk_items
+        self.num_chunks = meta.num_chunks
+        # a text chunk resident in cache carries its K-token halo
+        halo_bytes = self.k * 4 if meta.text_mode else 0
+        self._full_chunk_bytes = meta.chunk_bytes + halo_bytes
+        if cache_budget_bytes <= 0:
+            cache_budget_bytes = DEFAULT_CACHE_BUDGET
+        if cache_budget_bytes < self._full_chunk_bytes:
+            self._reader.close()  # constructor raises: don't leak the fd
+            raise ValueError(
+                f"chunk cache budget of {cache_budget_bytes} B cannot hold "
+                f"one chunk ({self._full_chunk_bytes} B). The streaming "
+                "build gives the LRU half of SuperblockConfig."
+                "cache_budget_bytes — lower chunk_records (or rewrite the "
+                "corpus file with smaller chunks), or raise the budget"
+            )
+        self.cache_budget_bytes = int(cache_budget_bytes)
+        self._cache: "OrderedDict[int, np.ndarray]" = OrderedDict()
+        self._resident = 0
+        self.evictions = 0
+
+    @property
+    def resident_bytes(self) -> int:
+        return self._resident
+
+    def close(self) -> None:
+        self._cache.clear()
+        self._resident = 0
+        self._reader.close()
+
+    def _chunk(self, ci: int) -> np.ndarray:
+        chunk = self._cache.get(ci)
+        if chunk is not None:
+            self._cache.move_to_end(ci)
+            self.cache_hits += 1
+            return chunk
+        self.cache_misses += 1
+        incoming = self._full_chunk_bytes  # upper bound (tail chunks shorter)
+        while self._cache and self._resident + incoming > self.cache_budget_bytes:
+            _, old = self._cache.popitem(last=False)
+            self._resident -= old.nbytes
+            self.evictions += 1
+        chunk = self._reader.read_chunk(ci, halo=self.k if self.text_mode else 0)
+        self._cache[ci] = chunk
+        self._resident += chunk.nbytes
+        return chunk
+
+    def gather(self, gidx: np.ndarray, depth: np.ndarray) -> np.ndarray:
+        gidx = np.asarray(gidx, np.int64)
+        m = gidx.shape[0]
+        depth = np.broadcast_to(np.asarray(depth, np.int64), (m,))
+        out = np.zeros((m, self.k), np.int32)
+        if self.text_mode:
+            pos = np.minimum(gidx + depth * self.k, self.n)
+            ci = np.minimum(pos // self.chunk_items, self.num_chunks - 1)
+        else:
+            row = (gidx >> self.stride_bits).astype(np.int64)
+            off = (gidx & ((1 << self.stride_bits) - 1)).astype(np.int64)
+            off = np.minimum(off + depth * self.k, self.max_len - 1)
+            ci = row // self.chunk_items
+        for c in np.unique(ci):
+            sel = np.flatnonzero(ci == c)
+            chunk = self._chunk(int(c))
+            base = int(c) * self.chunk_items
+            if self.text_mode:
+                local = pos[sel] - base  # halo covers the straddle/tail
+                cols = local[:, None] + np.arange(self.k)[None, :]
+                out[sel] = chunk[cols]
+            else:
+                cols = off[sel][:, None] + np.arange(self.k)[None, :]
+                valid = cols < self.row_len  # zero-pad past the row end
+                cc = np.minimum(cols, self.row_len - 1)
+                out[sel] = np.where(valid, chunk[row[sel] - base][
+                    np.arange(sel.size)[:, None], cc], 0)
+        return out
+
+    def read_items(self, lo: int, hi: int) -> np.ndarray:
+        return self._reader.read_items(lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# Cross-superblock store (out-of-core merge path, core/superblock.py)
+# ---------------------------------------------------------------------------
+
+
+class CorpusStore:
+    """Corpus window server for cross-superblock fetches.
+
+    During the out-of-core merge (``repro.core.superblock``) a run only holds
+    one superblock of 16-byte records; comparisons against suffixes of *other*
+    superblocks are answered by this store — the same "raw data stays put,
+    indexes move" discipline as :func:`mget_window`.  The corpus bytes live
+    behind a :class:`StoreBackend` (host-resident array or budgeted
+    disk-chunk cache); the store owns the device-path-mirroring semantics:
+
+    * at most ``request_capacity`` requests are served per call;
+    * :meth:`mget_window_host` serves **whole tie groups** in order (an
+      oversized leading group is served alone so rounds always progress) and
+      reports unserved actives for the caller's group-synchronous retry;
+    * byte accounting matches :class:`FetchStats` (``index_bytes`` per
+      request, derived from the address space like ``StoreSpec.index_bytes``;
+      ``K * token_bytes`` per raw-window response);
+    * ``peak_resident_bytes`` tracks the store-layer working set: backend
+      cache + the merge frontier (cursor windows registered via
+      :meth:`add_frontier`).
+    """
+
+    def __init__(self, corpus, cfg: SAConfig, request_capacity: int = 4096,
+                 backend: Optional[StoreBackend] = None):
+        if backend is None:
+            backend = InMemoryBackend(corpus, cfg)
+        self.backend = backend
+        self.text_mode = backend.text_mode
+        self.n = backend.n
+        self.stride_bits = backend.stride_bits
+        self.max_len = backend.max_len
+        self.k = cfg.prefix_len
+        self.request_capacity = max(1, int(request_capacity))
+        self.token_bytes = token_bytes(cfg.vocab_size)
+        self.index_bytes = index_request_bytes(self.n, self.stride_bits)
+        # fetch accounting (read by the superblock merge's Footprint)
+        self.requests = 0
+        self.request_bytes = 0
+        self.response_bytes = 0
+        self.retries = 0
+        self.rounds = 0
+        self.peak_windows = 0
+        # store-layer residency: backend cache + cursor frontier
+        self.frontier_bytes = 0
+        self.peak_resident_bytes = 0
+        self._note_resident()
+
+    @property
+    def max_window_depth(self) -> int:
+        """Upper bound on K-token windows any suffix comparison can consume
+        (one extra all-zero window past the end resolves exhaustion)."""
+        return -(-self.max_len // self.k) + 2
+
+    # -- residency accounting ----------------------------------------------
+    def _note_resident(self) -> None:
+        cur = self.backend.resident_bytes + self.frontier_bytes
+        if cur > self.peak_resident_bytes:
+            self.peak_resident_bytes = cur
+
+    def add_frontier(self, delta_bytes: int) -> None:
+        """Register merge-frontier residency (cursor window cache deltas)."""
+        self.frontier_bytes += delta_bytes
+        if delta_bytes > 0:
+            self._note_resident()
+
+    # -- raw gather ---------------------------------------------------------
+    def _gather(self, gidx: np.ndarray, depth: np.ndarray) -> np.ndarray:
+        out = self.backend.gather(np.asarray(gidx, np.int64), depth)
+        self._note_resident()
+        return out
 
     # -- batched fetch APIs -------------------------------------------------
     def fetch_windows(self, gidx: np.ndarray, depth) -> np.ndarray:
@@ -310,7 +557,7 @@ class CorpusStore:
             out[lo:hi] = self._gather(gidx[lo:hi], depth[lo:hi])
             self.rounds += 1
             self.requests += hi - lo
-            self.request_bytes += (hi - lo) * 8
+            self.request_bytes += (hi - lo) * self.index_bytes
             self.response_bytes += (hi - lo) * self.k * self.token_bytes
         self.peak_windows = max(self.peak_windows, m)
         return out
@@ -350,7 +597,7 @@ class CorpusStore:
         win[served] = self._gather(gidx[served], depth[served])
         ok[served] = True
         self.requests += served.size
-        self.request_bytes += served.size * 8
+        self.request_bytes += served.size * self.index_bytes
         self.response_bytes += served.size * self.k * self.token_bytes
         self.retries += act.size - served.size
         self.peak_windows = max(self.peak_windows, served.size)
@@ -370,16 +617,28 @@ class WindowCursor:
     tie-breaking depth.
 
     Fetches go through the owning store's batched APIs, so all byte/round
-    accounting stays in one place; the cursor only adds `cached_windows` /
-    `peak_cached_windows` (resident working-set accounting — released as
-    suffixes are emitted from the merge).
+    accounting stays in one place; the cursor adds `cached_windows` /
+    `peak_cached_windows` and registers its byte footprint with the store's
+    frontier accounting (``CorpusStore.add_frontier``) — cached windows are
+    *owned copies*, so a cursor entry never pins a whole fetch batch or a
+    backend disk chunk in memory.  Windows are released as suffixes are
+    emitted from the merge (:meth:`release`), or wholesale between merge
+    phases (:meth:`release_all`, the streaming build's frontier reset).
     """
 
     def __init__(self, store: CorpusStore):
         self.store = store
         self._win = {}  # gidx -> [window at depth 0, window at depth 1, ...]
+        self.window_bytes = store.k * 4  # one cached (K,) int32 window
         self.cached_windows = 0
         self.peak_cached_windows = 0
+
+    def _account(self, delta: int) -> None:
+        self.cached_windows += delta
+        if delta > 0:
+            self.peak_cached_windows = max(
+                self.peak_cached_windows, self.cached_windows)
+        self.store.add_frontier(delta * self.window_bytes)
 
     def prefetch(self, gidx: np.ndarray) -> None:
         """Batch-fetch depth-0 windows for every uncached suffix in ``gidx``
@@ -393,9 +652,8 @@ class WindowCursor:
             return
         wins = self.store.fetch_windows(miss, 0)
         for i, g in enumerate(miss.tolist()):
-            self._win[g] = [wins[i]]
-        self.cached_windows += miss.size
-        self.peak_cached_windows = max(self.peak_cached_windows, self.cached_windows)
+            self._win[g] = [wins[i].copy()]
+        self._account(miss.size)
 
     def window(self, gidx: int, depth: int) -> np.ndarray:
         """The (K,) window of ``gidx`` at ``depth`` (cached; fetched on miss)."""
@@ -405,9 +663,7 @@ class WindowCursor:
         while len(ws) <= depth:
             ws.append(self.store.fetch_windows(
                 np.array([gidx], np.int64), len(ws))[0])
-            self.cached_windows += 1
-            self.peak_cached_windows = max(
-                self.peak_cached_windows, self.cached_windows)
+            self._account(1)
         return ws[depth]
 
     def offer(self, gidx: int, depth: int, window: np.ndarray) -> None:
@@ -422,19 +678,26 @@ class WindowCursor:
         if ws is None:
             if depth != 0:
                 return
-            self._win[gidx] = [window]
+            self._win[gidx] = [np.array(window, np.int32, copy=True)]
         elif len(ws) == depth:
-            ws.append(window)
+            ws.append(np.array(window, np.int32, copy=True))
         else:
             return
-        self.cached_windows += 1
-        self.peak_cached_windows = max(self.peak_cached_windows, self.cached_windows)
+        self._account(1)
 
     def release(self, gidx: int) -> None:
         """Drop a suffix's cached windows (call when the merge emits it)."""
         ws = self._win.pop(gidx, None)
         if ws is not None:
-            self.cached_windows -= len(ws)
+            self._account(-len(ws))
+
+    def release_all(self) -> None:
+        """Drop every cached window (streaming merge's inter-phase reset:
+        residency is reclaimed at the price of re-fetching on next probe)."""
+        total = self.cached_windows
+        self._win.clear()
+        if total:
+            self._account(-total)
 
     def less(self, a: int, b: int) -> bool:
         """Exact ``suffix(a) < suffix(b)``; equal contents tie by index.

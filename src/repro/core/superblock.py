@@ -47,6 +47,9 @@ from __future__ import annotations
 
 import heapq
 import math
+import os
+import shutil
+import tempfile
 import warnings
 from dataclasses import dataclass
 from typing import Callable, List, Optional, Tuple
@@ -55,7 +58,14 @@ import numpy as np
 
 from repro.config import SAConfig, SuperblockConfig
 from repro.core.pipeline import DeviceRefiner, build_suffix_array
-from repro.core.store import CorpusStore, WindowCursor
+from repro.core.store import (
+    DEFAULT_CACHE_BUDGET,
+    ChunkedFileBackend,
+    CorpusStore,
+    InMemoryBackend,
+    StoreBackend,
+    WindowCursor,
+)
 from repro.core.types import Footprint, SAResult
 
 
@@ -139,6 +149,122 @@ def plan_superblocks(
         blocks=blocks,
         stride_bits=stride_bits,
     )
+
+
+# ---------------------------------------------------------------------------
+# store backend resolution + streaming scaffolding
+# ---------------------------------------------------------------------------
+
+
+def corpus_shape_of(corpus) -> Tuple[int, ...]:
+    """Corpus shape without materializing it: arrays report their own shape,
+    a :class:`StoreBackend` its geometry, a chunked-corpus file path its
+    header metadata."""
+    if isinstance(corpus, StoreBackend):
+        return corpus.shape
+    if isinstance(corpus, (str, os.PathLike)):
+        from repro.data.chunk_store import read_chunked_corpus_meta
+
+        meta = read_chunked_corpus_meta(os.fspath(corpus))
+        return (meta.items,) if meta.text_mode else (meta.items, meta.row_len)
+    return np.shape(corpus)
+
+
+class _Scratch:
+    """Private scratch directory for one streaming build (serialized corpus,
+    per-block SA spills); removed when the build finishes."""
+
+    def __init__(self, parent: Optional[str]):
+        self.dir = tempfile.mkdtemp(prefix="sa_superblock_", dir=parent)
+        self._n = 0
+        self.spilled_runs = 0
+        self.spilled_bytes = 0
+
+    def path(self, name: str) -> str:
+        return os.path.join(self.dir, name)
+
+    def spill_run(self, arr: np.ndarray) -> np.ndarray:
+        """Spill a sorted run to disk and hand back a read-only memmap: the
+        run's body is disk-backed, only pages the merge actually touches
+        (frontier read-ahead, partition probes) come resident."""
+        p = self.path(f"run{self._n}.npy")
+        self._n += 1
+        np.save(p, np.ascontiguousarray(arr))
+        self.spilled_runs += 1
+        self.spilled_bytes += int(arr.size) * arr.dtype.itemsize
+        return np.load(p, mmap_mode="r")
+
+    def cleanup(self) -> None:
+        shutil.rmtree(self.dir, ignore_errors=True)
+
+
+def _resolve_backend(
+    corpus, cfg: SAConfig, sb: SuperblockConfig, scratch: Optional[_Scratch]
+) -> StoreBackend:
+    """Build the store backend the whole construction streams through.
+
+    * array + ``store_backend="memory"`` -> :class:`InMemoryBackend` (the
+      PR-1/2 behavior, unchanged semantics);
+    * array + ``store_backend="chunked"`` -> the array is serialized once to
+      the chunked on-disk format in ``scratch`` and served from a
+      :class:`ChunkedFileBackend`;
+    * path -> :class:`ChunkedFileBackend` over the existing file (never
+      host-materialized);
+    * an already-constructed :class:`StoreBackend` passes through.
+
+    The chunked backend's LRU gets **half** of ``cache_budget_bytes``; the
+    other half covers the merge frontier (read-ahead + tie-depth probes), so
+    ``Footprint.peak_resident_bytes`` — cache + frontier — stays under the
+    configured budget as a whole.
+    """
+    if isinstance(corpus, StoreBackend):
+        return corpus
+    budget = (sb.cache_budget_bytes if sb.cache_budget_bytes > 0
+              else DEFAULT_CACHE_BUDGET)
+    if isinstance(corpus, (str, os.PathLike)):
+        return ChunkedFileBackend(
+            os.fspath(corpus), cfg, cache_budget_bytes=budget // 2)
+    if sb.store_backend == "memory":
+        return InMemoryBackend(corpus, cfg)
+    if sb.store_backend != "chunked":
+        raise ValueError(f"unknown store_backend: {sb.store_backend!r}")
+    from repro.data.chunk_store import chunk_items_for_budget, write_chunked_corpus
+
+    corpus = np.asarray(corpus, np.int32)
+    items = corpus.shape[0]
+    row_len = 1 if corpus.ndim == 1 else corpus.shape[1]
+    chunk_items = sb.chunk_records
+    if chunk_items <= 0:
+        # several chunks must fit the LRU half-budget or caching degenerates
+        chunk_items = chunk_items_for_budget(items, row_len, budget)
+    assert scratch is not None
+    path = scratch.path("corpus.sachunk")
+    write_chunked_corpus(corpus, path, chunk_items=chunk_items)
+    return ChunkedFileBackend(path, cfg, cache_budget_bytes=budget // 2)
+
+
+@dataclass
+class _MergeFrontier:
+    """Streaming merge policy: bound the k-way merge's resident frontier.
+
+    ``readahead_bytes`` is split across the live runs of each bucket merge —
+    every run head keeps at most that many depth-0 windows prefetched ahead
+    of its cursor (batched store rounds), instead of prefetching the whole
+    bucket.  ``drop_after_partition`` releases every cached cursor window
+    once a bucket partition is located: probe windows are re-fetched by the
+    bucket merges that need them, trading bounded traffic for bounded
+    residency.
+    """
+
+    readahead_bytes: int
+    window_bytes: int
+    drop_after_partition: bool = True
+    # splitter pools are merged with their windows kept hot; bound how many
+    # (a too-small pool only coarsens splitters — more recursion, still exact)
+    max_pool_windows: int = 64
+
+    def per_run(self, num_runs: int) -> int:
+        return max(2, self.readahead_bytes // (max(1, num_runs) * self.window_bytes))
 
 
 # ---------------------------------------------------------------------------
@@ -308,26 +434,36 @@ def _sorted_runs(
 # ---------------------------------------------------------------------------
 
 
-def _rank_in_run(cur: WindowCursor, run: np.ndarray, splitter: int) -> int:
+def _rank_in_run(cur: WindowCursor, run: np.ndarray, splitter: int,
+                 drop_probes: bool = False) -> int:
     """Number of ``run`` members with suffix < splitter, by binary search.
 
     ``run`` must be exactly sorted; each probe is one exact store comparison
     (windows cached by the cursor), so locating a splitter costs O(log n)
     comparisons instead of the linear scan of :func:`_less_than` over every
-    member.
+    member.  ``drop_probes`` (streaming mode) releases each probed member's
+    windows as soon as the search leaves it — only the splitter's windows
+    stay hot across runs, so one search keeps O(tie depth) windows resident
+    instead of O(log n · tie depth).
     """
     lo, hi = 0, run.size
     while lo < hi:
         mid = (lo + hi) // 2
-        if cur.less(int(run[mid]), splitter):
+        g = int(run[mid])
+        if cur.less(g, splitter):
             lo = mid + 1
         else:
             hi = mid
+        if drop_probes and g != splitter:
+            cur.release(g)
     return lo
 
 
 def _partition_runs(
-    cur: WindowCursor, runs: List[np.ndarray], splitters: np.ndarray
+    cur: WindowCursor,
+    runs: List[np.ndarray],
+    splitters: np.ndarray,
+    drop_probes: bool = False,
 ) -> List[List[np.ndarray]]:
     """Cut every sorted run at the splitter ranks.
 
@@ -341,7 +477,8 @@ def _partition_runs(
     for run in runs:
         cuts = [0]
         for s in splitters:
-            cuts.append(max(_rank_in_run(cur, run, int(s)), cuts[-1]))
+            cuts.append(max(_rank_in_run(cur, run, int(s), drop_probes),
+                            cuts[-1]))
         cuts.append(run.size)
         for b in range(nb):
             seg = run[cuts[b] : cuts[b + 1]]
@@ -352,14 +489,29 @@ def _partition_runs(
 
 class _Head:
     """Heap entry of the k-way merge: one run and its cursor position,
-    ordered by the exact suffix order of the current head element."""
+    ordered by the exact suffix order of the current head element.
 
-    __slots__ = ("cur", "run", "pos")
+    ``readahead`` > 0 bounds the resident frontier: only the next
+    ``readahead`` members' depth-0 windows are batch-prefetched ahead of the
+    cursor position (:meth:`ensure_prefetch` refills as the head advances);
+    0 means the whole run was prefetched up front (the in-memory default).
+    """
 
-    def __init__(self, cur: WindowCursor, run: np.ndarray):
+    __slots__ = ("cur", "run", "pos", "readahead", "pref_end")
+
+    def __init__(self, cur: WindowCursor, run: np.ndarray, readahead: int = 0):
         self.cur = cur
         self.run = run
         self.pos = 0
+        self.readahead = readahead
+        self.pref_end = 0
+        self.ensure_prefetch()
+
+    def ensure_prefetch(self) -> None:
+        if self.readahead and self.pos >= self.pref_end:
+            self.pref_end = min(self.pos + self.readahead, self.run.size)
+            self.cur.prefetch(np.asarray(self.run[self.pos:self.pref_end],
+                                         np.int64))
 
     @property
     def gidx(self) -> int:
@@ -370,16 +522,22 @@ class _Head:
 
 
 def _kway_merge(
-    cur: WindowCursor, runs: List[np.ndarray], release: bool = True
+    cur: WindowCursor,
+    runs: List[np.ndarray],
+    release: bool = True,
+    frontier: Optional[_MergeFrontier] = None,
 ) -> np.ndarray:
     """Merge exactly-sorted runs with a heap of run heads.
 
-    Every member's depth-0 window is prefetched in one batched store round;
-    head-vs-head comparisons then hit the cursor cache and deepen only to
-    actual tie-breaking depth.  Emitted suffixes release their windows
-    (unless the caller wants them kept hot — splitter pools are re-probed by
-    the partition right after), so the resident working set shrinks as the
-    merge drains.
+    Without a ``frontier`` every member's depth-0 window is prefetched in
+    one batched store round (the in-memory default); with one, each run
+    keeps only a bounded read-ahead of windows resident — batched refills as
+    heads advance, so store rounds stay amortized while the frontier stays
+    within the residency budget.  Head-vs-head comparisons hit the cursor
+    cache and deepen only to actual tie-breaking depth.  Emitted suffixes
+    release their windows (unless the caller wants them kept hot — splitter
+    pools are re-probed by the partition right after), so the resident
+    working set shrinks as the merge drains.
     """
     runs = [r for r in runs if r.size]
     if not runs:
@@ -387,8 +545,12 @@ def _kway_merge(
     if len(runs) == 1:
         return runs[0]
     total = sum(r.size for r in runs)
-    cur.prefetch(np.concatenate(runs))
-    heap = [_Head(cur, r) for r in runs]
+    if frontier is None:
+        cur.prefetch(np.concatenate(runs))
+        heap = [_Head(cur, r) for r in runs]
+    else:
+        per_run = frontier.per_run(len(runs))
+        heap = [_Head(cur, r, readahead=per_run) for r in runs]
     heapq.heapify(heap)
     out = np.empty(total, np.int64)
     i = 0
@@ -401,6 +563,7 @@ def _kway_merge(
             cur.release(g)
         h.pos += 1
         if h.pos < h.run.size:
+            h.ensure_prefetch()
             heapq.heappush(heap, h)
     return out
 
@@ -411,6 +574,7 @@ def _merge_runs(
     cap: int,
     samples_per_split: int,
     rank_pool: Callable[[List[np.ndarray]], np.ndarray],
+    frontier: Optional[_MergeFrontier] = None,
 ) -> List[np.ndarray]:
     """Merge exactly-sorted runs into <= cap pieces of the true order.
 
@@ -425,15 +589,23 @@ def _merge_runs(
     subsequences, each inheriting exact sortedness from its run) — k-way
     merged through the shared cursor, so the pool's windows are fetched once
     and stay hot for the partition probes and the final bucket merges.
+
+    A ``frontier`` (streaming mode) bounds what any of this keeps resident:
+    bucket merges read ahead instead of prefetching whole buckets, and the
+    cursor cache is dropped once a partition is located
+    (``drop_after_partition`` — probe windows re-fetch on demand).
     """
     runs = [r for r in runs if r.size]
     total = sum(r.size for r in runs)
     if total == 0:
         return []
     if total <= cap:
-        return [_kway_merge(cur, runs)]
+        return [_kway_merge(cur, runs, frontier=frontier)]
     nb = -(-total // cap) + 1
     take = min(total, cap, max(nb * samples_per_split, nb))
+    if frontier is not None:
+        # pool windows stay hot through the partition: bound their residency
+        take = min(take, max(nb, frontier.max_pool_windows))
     pos = (np.arange(take, dtype=np.int64) * total) // take
     # evenly spaced picks over the concatenated runs = per-run quantiles;
     # regroup them per run so each pick subsequence is itself a sorted run.
@@ -445,12 +617,17 @@ def _merge_runs(
             pool_runs.append(run[sel])
     pool = rank_pool(pool_runs)
     picks = pool[[(i * pool.size) // nb for i in range(1, nb)]]
+    buckets = _partition_runs(cur, runs, picks,
+                              drop_probes=frontier is not None)
+    if frontier is not None and frontier.drop_after_partition:
+        cur.release_all()  # probe/pool windows re-fetch on demand, bounded
     out: List[np.ndarray] = []
-    for segs in _partition_runs(cur, runs, picks):
+    for segs in buckets:
         sub_total = sum(s.size for s in segs)
         if sub_total >= total:
             raise RuntimeError("superblock k-way partition made no progress")
-        out.extend(_merge_runs(cur, segs, cap, samples_per_split, rank_pool))
+        out.extend(_merge_runs(cur, segs, cap, samples_per_split, rank_pool,
+                               frontier=frontier))
     return out
 
 
@@ -477,7 +654,8 @@ def _split_boundary_risk(
     runs: List[np.ndarray] = []
     risk: List[np.ndarray] = []
     last = len(plan.blocks) - 1
-    for bi, ((_, hi), sa_b) in enumerate(zip(plan.blocks, local_sas)):
+    for bi, ((_, hi), sa_b) in enumerate(zip(plan.blocks, local_sas,
+                                             strict=True)):
         if bi == last:
             runs.append(sa_b)
             continue
@@ -505,35 +683,118 @@ def build_suffix_array_superblock(
     mesh=None,
 ) -> SAResult:
     """Out-of-core SA build: per-superblock pipeline runs + store-mediated
-    merge.  Falls back to the single-pass pipeline when one block suffices."""
-    corpus = np.asarray(corpus, np.int32)
-    plan = plan_superblocks(corpus.shape, cfg, sb)
+    merge.  Falls back to the single-pass pipeline when one block suffices.
+
+    ``corpus`` may be an array, a chunked-corpus file path, or a
+    :class:`repro.core.store.StoreBackend`.  With the chunked backend
+    (``sb.store_backend="chunked"`` or a file path) the build is
+    out-of-*host-RAM*: corpus bytes stay on disk behind a budgeted LRU chunk
+    cache, each superblock stages only its own item range for its pipeline
+    run, block SAs spill to disk, and the merge keeps a bounded read-ahead
+    frontier — ``Footprint.peak_resident_bytes`` (cache + frontier) stays
+    under ``sb.cache_budget_bytes``.
+    """
+    # a scratch dir is needed whenever the build streams (serialized corpus
+    # and/or per-block SA spills): explicit chunked request, a corpus file
+    # path, or a non-resident backend instance.
+    needs_scratch = (
+        isinstance(corpus, (str, os.PathLike))
+        or (isinstance(corpus, StoreBackend)
+            and not isinstance(corpus, InMemoryBackend))
+        or (not isinstance(corpus, StoreBackend)
+            and sb.store_backend == "chunked")
+    )
+    scratch = _Scratch(sb.spill_dir) if needs_scratch else None
+    backend: Optional[StoreBackend] = None
+    try:
+        backend = _resolve_backend(corpus, cfg, sb, scratch)
+        return _build_superblock(
+            backend, lengths, cfg, sb, mesh, scratch,
+            original_corpus=corpus,
+        )
+    finally:
+        if backend is not None and backend is not corpus:
+            backend.close()
+        if scratch is not None:
+            scratch.cleanup()
+
+
+def _build_superblock(
+    backend: StoreBackend,
+    lengths,
+    cfg: SAConfig,
+    sb: SuperblockConfig,
+    mesh,
+    scratch: Optional[_Scratch],
+    original_corpus,
+) -> SAResult:
+    plan = plan_superblocks(backend.shape, cfg, sb)
     if plan.num_superblocks <= 1:
-        return build_suffix_array(corpus, lengths=lengths, cfg=cfg, mesh=mesh)
+        return build_suffix_array(
+            backend.read_items(0, backend.n), lengths=lengths, cfg=cfg,
+            mesh=mesh,
+        )
+    if sb.merge_backend not in ("host", "device"):
+        raise ValueError(f"unknown merge_backend: {sb.merge_backend!r}")
+    if sb.merge_algorithm not in ("kway", "rerank"):
+        raise ValueError(f"unknown merge_algorithm: {sb.merge_algorithm!r}")
+    streaming = not isinstance(backend, InMemoryBackend)
+    if streaming and sb.merge_backend == "device":
+        raise ValueError(
+            "merge_backend='device' needs the corpus HBM-resident; "
+            "use store_backend='memory' (the chunked backend exists to keep "
+            "the corpus off-host, which the device refiner cannot serve)"
+        )
+    assert not streaming or scratch is not None  # wrapper provides it
 
     store = CorpusStore(
-        corpus, cfg,
+        None, cfg, backend=backend,
         request_capacity=min(sb.request_capacity, plan.capacity_records),
     )
+    frontier = None
+    if streaming:
+        budget = (sb.cache_budget_bytes if sb.cache_budget_bytes > 0
+                  else DEFAULT_CACHE_BUDGET)
+        # LRU half + read-ahead eighth + pool eighth; the rest is slack for
+        # tie-depth chains and partition binary-search probes (probes release
+        # per search, everything cached releases per partition).
+        wb = store.k * 4
+        frontier = _MergeFrontier(
+            readahead_bytes=max(budget // 8, 2 * plan.num_superblocks * wb),
+            window_bytes=wb,
+            max_pool_windows=max(4, min(64, (budget // 8) // wb)),
+        )
+
+    def keep_run(sa_b: np.ndarray) -> np.ndarray:
+        """Streaming: spill a sorted run, hand back its disk-backed memmap.
+        Runs that are already spill memmaps (or views of one — e.g. the
+        final text block, which the risk split passes through unfiltered)
+        stay as they are: re-spilling would read the whole run back in."""
+        if (scratch is not None and streaming and sa_b.size
+                and not isinstance(sa_b, np.memmap)):
+            return scratch.spill_run(sa_b)
+        return sa_b
 
     # ---- phase 2: local SA per superblock (existing pipeline, one block
-    # of records resident per run) --------------------------------------
+    # of items staged host-side + one block of records resident per run) --
+    corpus_tokens = backend.n * max(1, backend.row_len)
     local_sas: List[np.ndarray] = []
     fp = Footprint(
-        input=int(corpus.size) * store.token_bytes,
-        store_put=int(corpus.size) * store.token_bytes,
+        input=corpus_tokens * store.token_bytes,
+        store_put=corpus_tokens * store.token_bytes,
         superblocks=plan.num_superblocks,
     )
     block_stats = []
     for lo, hi in plan.blocks:
+        block = backend.read_items(lo, hi)  # transient staging, not cached
         if plan.text_mode:
-            res = build_suffix_array(corpus[lo:hi], cfg=cfg, mesh=mesh)
+            res = build_suffix_array(block, cfg=cfg, mesh=mesh)
             sa_b = res.suffix_array + lo
         else:
             lens_b = None if lengths is None else np.asarray(lengths)[lo:hi]
-            res = build_suffix_array(corpus[lo:hi], lengths=lens_b, cfg=cfg, mesh=mesh)
+            res = build_suffix_array(block, lengths=lens_b, cfg=cfg, mesh=mesh)
             sa_b = res.suffix_array + (np.int64(lo) << plan.stride_bits)
-        local_sas.append(sa_b)
+        local_sas.append(keep_run(sa_b))
         bf = res.footprint
         fp.shuffle += bf.shuffle
         fp.fetch_request += bf.fetch_request
@@ -544,10 +805,6 @@ def build_suffix_array_superblock(
         block_stats.append(res.stats)
 
     # ---- phase 3: boundary-exact merge via the store -------------------
-    if sb.merge_backend not in ("host", "device"):
-        raise ValueError(f"unknown merge_backend: {sb.merge_backend!r}")
-    if sb.merge_algorithm not in ("kway", "rerank"):
-        raise ValueError(f"unknown merge_algorithm: {sb.merge_algorithm!r}")
     samples = max(1, min(
         sb.samples_per_block,
         plan.capacity_records // plan.num_superblocks,
@@ -558,12 +815,19 @@ def build_suffix_array_superblock(
     cur = WindowCursor(store)
     refiner: Optional[DeviceRefiner] = None
     if sb.merge_backend == "device":
-        refiner = DeviceRefiner(corpus, cfg, lengths=lengths, mesh=mesh)
+        refiner = DeviceRefiner(
+            original_corpus if isinstance(original_corpus, np.ndarray)
+            else backend.read_items(0, backend.n),
+            cfg, lengths=lengths, mesh=mesh,
+        )
         refine = refiner.refine
     else:
         # kway: warm the merge cursor with every re-rank fetch so the k-way
-        # phase re-serves those windows instead of re-fetching them.
-        warm = cur if sb.merge_algorithm == "kway" else None
+        # phase re-serves those windows instead of re-fetching them.  Not in
+        # streaming mode: warming would keep one window per re-ranked suffix
+        # resident, unbounding the frontier — the read-ahead re-fetches what
+        # it actually needs instead.
+        warm = cur if (sb.merge_algorithm == "kway" and not streaming) else None
 
         def refine(g: np.ndarray) -> np.ndarray:
             return _refine_sort(store, g, cursor=warm)
@@ -585,17 +849,20 @@ def build_suffix_array_superblock(
             runs, risk = _split_boundary_risk(
                 plan, local_sas, block_stats, store.k
             )
+            runs = [keep_run(r) for r in runs]  # re-spill the filtered runs
             risk_pieces: List[np.ndarray] = []
             if risk.size:
                 # the risk set is re-ranked into <= cap sorted pieces; each
                 # piece then joins the k-way merge as one more run.
                 risk_pieces = [
-                    p for p in _sorted_runs(store, risk, cap, samples, refine)
+                    keep_run(p)
+                    for p in _sorted_runs(store, risk, cap, samples, refine)
                     if p.size
                 ]
             if runs:
                 pieces = _merge_runs(
-                    cur, runs + risk_pieces, cap, samples, rank_pool
+                    cur, runs + risk_pieces, cap, samples, rank_pool,
+                    frontier=frontier,
                 )
             else:
                 # every suffix was at risk: the re-ranked pieces already are
@@ -606,15 +873,16 @@ def build_suffix_array_superblock(
             # read) — unless a block hit the refinement hard cap, in which
             # case its order is unproven and it is re-ranked like a risk set.
             runs, bad = [], []
-            for sa_b, st in zip(local_sas, block_stats):
+            for sa_b, st in zip(local_sas, block_stats, strict=True):
                 (runs if st.get("unresolved", 0) == 0 else bad).append(sa_b)
             if bad:
                 runs = runs + [
-                    p for p in _sorted_runs(
+                    keep_run(p) for p in _sorted_runs(
                         store, np.concatenate(bad), cap, samples, refine)
                     if p.size
                 ]
-            pieces = _merge_runs(cur, runs, cap, samples, rank_pool)
+            pieces = _merge_runs(cur, runs, cap, samples, rank_pool,
+                                 frontier=frontier)
     sa = np.concatenate(pieces) if pieces else np.zeros((0,), np.int64)
 
     dev_req = refiner.requests if refiner else 0
@@ -627,6 +895,7 @@ def build_suffix_array_superblock(
                           refiner.peak_records if refiner else 0,
                           max((p.size for p in pieces), default=0))
     fp.materialized = fp.peak_records * 16
+    fp.peak_resident_bytes = store.peak_resident_bytes
 
     stats = {
         "num_suffixes": int(sa.shape[0]),
@@ -652,6 +921,15 @@ def build_suffix_array_superblock(
         "block_rounds": [s["rounds"] for s in block_stats],
         "dropped": fp.dropped,
         "unresolved": sum(s["unresolved"] for s in block_stats),
+        # store-backend residency (PR 3)
+        "store_backend": "chunked" if streaming else "memory",
+        "corpus_bytes": backend.corpus_bytes,
+        "peak_resident_bytes": fp.peak_resident_bytes,
+        "store_cache_hits": backend.cache_hits,
+        "store_cache_misses": backend.cache_misses,
+        "store_cache_hit_rate": backend.hit_rate,
+        "spilled_runs": scratch.spilled_runs if scratch else 0,
+        "spilled_bytes": scratch.spilled_bytes if scratch else 0,
     }
     return SAResult(suffix_array=sa, footprint=fp, stats=stats)
 
@@ -664,11 +942,28 @@ def build_suffix_array_auto(
     mesh=None,
 ) -> SAResult:
     """Single entry point: single-pass when the record set fits one run,
-    out-of-core superblocks when it does not (the launcher's policy)."""
+    out-of-core superblocks when it does not (the launcher's policy).
+    Accepts the same corpus forms as :func:`build_suffix_array_superblock`
+    (array / chunked file path / store backend)."""
     sb = sb or SuperblockConfig()
-    plan = plan_superblocks(np.shape(corpus), cfg, sb)
+    plan = plan_superblocks(corpus_shape_of(corpus), cfg, sb)
     if plan.num_superblocks <= 1:
+        if not isinstance(corpus, np.ndarray):
+            corpus = _materialize_corpus(corpus, cfg)
         return build_suffix_array(corpus, lengths=lengths, cfg=cfg, mesh=mesh)
     return build_suffix_array_superblock(
         corpus, lengths=lengths, cfg=cfg, sb=sb, mesh=mesh
     )
+
+
+def _materialize_corpus(corpus, cfg: SAConfig) -> np.ndarray:
+    """Whole-corpus host materialization for the single-pass fallback (a
+    plan that fits one run is in-core by definition)."""
+    if isinstance(corpus, StoreBackend):
+        return np.asarray(corpus.read_items(0, corpus.n), np.int32)
+    if isinstance(corpus, (str, os.PathLike)):
+        from repro.data.chunk_store import ChunkedCorpusReader
+
+        with ChunkedCorpusReader(os.fspath(corpus)) as r:
+            return r.read_items(0, r.meta.items)
+    return np.asarray(corpus, np.int32)

@@ -100,6 +100,11 @@ class Footprint:
     # once.  superblocks == 1 <=> single-pass in-core build.
     superblocks: int = 1
     peak_records: int = 0
+    # store-layer residency (PR 3): peak bytes of the store working set —
+    # backend chunk cache + merge frontier (cursor windows) — during an
+    # out-of-core build.  With the chunked file backend this is bounded by
+    # SuperblockConfig.cache_budget_bytes; 0 = not measured (single-pass).
+    peak_resident_bytes: int = 0
 
     def total_traffic(self) -> int:
         return self.shuffle + self.fetch_request + self.fetch_response
@@ -119,6 +124,7 @@ class Footprint:
             "dropped": self.dropped,
             "superblocks": self.superblocks,
             "peak_record_bytes": self.peak_records * 16 / ref,
+            "peak_resident": self.peak_resident_bytes / ref,
         }
 
 

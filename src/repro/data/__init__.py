@@ -1,3 +1,11 @@
+from repro.data.chunk_store import (
+    ChunkedCorpusMeta,
+    ChunkedCorpusReader,
+    chunk_items_for_budget,
+    default_chunk_items,
+    read_chunked_corpus_meta,
+    write_chunked_corpus,
+)
 from repro.data.corpus import synth_dna_reads, synth_token_corpus
 from repro.data.dedup import dedup_corpus, find_duplicate_spans
 from repro.data.loader import DeterministicLoader
@@ -8,4 +16,10 @@ __all__ = [
     "dedup_corpus",
     "find_duplicate_spans",
     "DeterministicLoader",
+    "ChunkedCorpusMeta",
+    "ChunkedCorpusReader",
+    "chunk_items_for_budget",
+    "default_chunk_items",
+    "read_chunked_corpus_meta",
+    "write_chunked_corpus",
 ]

@@ -1,0 +1,189 @@
+"""Chunked on-disk corpus format (the >host-RAM store substrate).
+
+The paper's store keeps the raw corpus resident in memory; our
+``ChunkedFileBackend`` (``repro.core.store``) bounds *resident* bytes instead:
+the corpus lives in this flat chunked file and only an LRU-bounded set of
+chunks is ever host-resident.  This module is the serialization layer — a
+fixed little-endian header followed by raw row-major int32 tokens, addressed
+in chunks of whole corpus *items* (reads-mode rows / text-mode tokens):
+
+    [magic "SACHNK01"][version u32][text_mode u32]
+    [items i64][row_len i64][chunk_items i64]
+    [tokens ... int32 LE, row-major]
+
+Chunking by whole items keeps reads-mode rows atomic (a row never spans two
+chunks); text-mode windows *can* straddle a chunk edge, which the reader
+serves exactly via the ``halo`` argument (a chunk plus the next ``halo``
+tokens, zero-padded past the corpus end).
+"""
+from __future__ import annotations
+
+import os
+import struct
+from dataclasses import dataclass
+
+import numpy as np
+
+MAGIC = b"SACHNK01"
+_HEADER = struct.Struct("<8sIIqqq")
+HEADER_BYTES = _HEADER.size
+_VERSION = 1
+
+
+@dataclass(frozen=True)
+class ChunkedCorpusMeta:
+    """Static geometry of one chunked corpus file."""
+
+    text_mode: bool
+    items: int  # rows (reads mode) or tokens (text mode)
+    row_len: int  # L (reads) or 1 (text)
+    chunk_items: int  # items per chunk (last chunk may be short)
+
+    @property
+    def num_chunks(self) -> int:
+        return max(1, -(-self.items // self.chunk_items))
+
+    @property
+    def corpus_bytes(self) -> int:
+        """Raw on-disk token bytes (int32 lanes, the resident-set yardstick)."""
+        return self.items * self.row_len * 4
+
+    @property
+    def chunk_bytes(self) -> int:
+        """Bytes of one full chunk (the LRU cache's unit of residency)."""
+        return self.chunk_items * self.row_len * 4
+
+    def chunk_range(self, ci: int) -> tuple:
+        lo = ci * self.chunk_items
+        return lo, min(lo + self.chunk_items, self.items)
+
+
+def default_chunk_items(items: int, row_len: int,
+                        target_bytes: int = 1 << 20) -> int:
+    """Chunk size heuristic: ~``target_bytes`` per chunk, at least one item,
+    and at least 8 chunks for any non-trivial corpus (so an LRU budget of a
+    fraction of the corpus actually exercises eviction)."""
+    by_bytes = max(1, target_bytes // max(1, row_len * 4))
+    by_count = max(1, -(-items // 8))
+    return max(1, min(items, by_bytes, by_count))
+
+
+def chunk_items_for_budget(items: int, row_len: int,
+                           cache_budget_bytes: int) -> int:
+    """Chunk size compatible with a resident-byte budget.
+
+    The single source of the budget split used by the streaming build
+    (``repro.core.superblock``) *and* the launcher's ``--corpus-file``
+    serialization: the LRU cache gets half the budget, so chunks target an
+    eighth of it (several chunks cacheable, and a written file can never
+    make ``ChunkedFileBackend`` reject the same budget later).
+    """
+    return default_chunk_items(
+        items, row_len, target_bytes=max(row_len * 4, cache_budget_bytes // 8))
+
+
+def write_chunked_corpus(corpus, path: str, chunk_items: int = 0) -> ChunkedCorpusMeta:
+    """Serialize a corpus array to the chunked on-disk format.
+
+    ``corpus``: (items,) int32 tokens (text mode) or (items, L) int32 rows
+    (reads mode).  ``chunk_items`` 0 derives :func:`default_chunk_items`.
+    Returns the written :class:`ChunkedCorpusMeta`.
+    """
+    corpus = np.asarray(corpus, np.int32)
+    text_mode = corpus.ndim == 1
+    if text_mode:
+        items, row_len = corpus.shape[0], 1
+    else:
+        items, row_len = corpus.shape
+    if chunk_items <= 0:
+        chunk_items = default_chunk_items(items, row_len)
+    chunk_items = max(1, min(chunk_items, max(items, 1)))
+    meta = ChunkedCorpusMeta(text_mode=text_mode, items=items,
+                             row_len=row_len, chunk_items=chunk_items)
+    with open(path, "wb") as f:
+        f.write(_HEADER.pack(MAGIC, _VERSION, int(text_mode),
+                             items, row_len, chunk_items))
+        # stream chunk by chunk: the writer never needs more than one chunk
+        # contiguous (the input array may itself be a memmap).
+        for ci in range(meta.num_chunks):
+            lo, hi = meta.chunk_range(ci)
+            f.write(np.ascontiguousarray(corpus[lo:hi], "<i4").tobytes())
+    return meta
+
+
+def read_chunked_corpus_meta(path: str) -> ChunkedCorpusMeta:
+    with open(path, "rb") as f:
+        raw = f.read(HEADER_BYTES)
+    if len(raw) < HEADER_BYTES:
+        raise ValueError(f"{path}: truncated chunked-corpus header")
+    magic, version, text_mode, items, row_len, chunk_items = _HEADER.unpack(raw)
+    if magic != MAGIC:
+        raise ValueError(f"{path}: not a chunked corpus file (magic {magic!r})")
+    if version != _VERSION:
+        raise ValueError(f"{path}: unsupported version {version}")
+    return ChunkedCorpusMeta(text_mode=bool(text_mode), items=items,
+                             row_len=row_len, chunk_items=chunk_items)
+
+
+class ChunkedCorpusReader:
+    """pread-based random access over a chunked corpus file.
+
+    Every read is positional (``os.pread``), so one reader can serve
+    interleaved chunk and range requests without seek state; nothing is
+    cached here — residency policy belongs to the caller (the store
+    backend's LRU).
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self.meta = read_chunked_corpus_meta(path)
+        self._fd = os.open(path, os.O_RDONLY)
+
+    def close(self) -> None:
+        if self._fd is not None:
+            os.close(self._fd)
+            self._fd = None
+
+    def __enter__(self) -> "ChunkedCorpusReader":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _read_tokens(self, tok_lo: int, tok_hi: int) -> np.ndarray:
+        """Flat token positions [tok_lo, tok_hi) across the whole corpus,
+        zero-padded past the end (the suffix-window padding convention)."""
+        total = self.meta.items * self.meta.row_len
+        want = tok_hi - tok_lo
+        avail = max(0, min(tok_hi, total) - tok_lo)
+        out = np.zeros(want, np.int32)
+        if avail:
+            raw = os.pread(self._fd, avail * 4, HEADER_BYTES + tok_lo * 4)
+            if len(raw) != avail * 4:
+                raise IOError(
+                    f"{self.path}: short read at token {tok_lo} "
+                    f"({len(raw)} of {avail * 4} bytes)"
+                )
+            out[:avail] = np.frombuffer(raw, "<i4")
+        return out
+
+    def read_items(self, lo: int, hi: int) -> np.ndarray:
+        """Materialize items [lo, hi): (hi-lo,) tokens or (hi-lo, L) rows."""
+        m = self.meta
+        lo, hi = max(0, lo), min(hi, m.items)
+        flat = self._read_tokens(lo * m.row_len, hi * m.row_len)
+        return flat if m.text_mode else flat.reshape(hi - lo, m.row_len)
+
+    def read_chunk(self, ci: int, halo: int = 0) -> np.ndarray:
+        """Chunk ``ci`` plus ``halo`` extra trailing *tokens* (text mode:
+        serves windows that straddle the chunk edge; zero-padded past the
+        corpus end).  Reads mode returns (rows, L) and accepts no halo —
+        rows are atomic, no window spans a chunk.
+        """
+        m = self.meta
+        lo, hi = m.chunk_range(ci)
+        if m.text_mode:
+            return self._read_tokens(lo, hi + halo)
+        if halo:
+            raise ValueError("halo is a text-mode concept (rows are atomic)")
+        return self.read_items(lo, hi)

@@ -62,7 +62,7 @@ def dedup_corpus(
     keep = np.ones(len(tokens), bool)
     masked = 0
     # greedy: keep the earlier occurrence, mask the later one
-    for a, b, l in sorted(spans, key=lambda s: s[1]):
+    for _src, b, l in sorted(spans, key=lambda s: s[1]):
         if keep[b : b + l].any():
             masked += int(keep[b : b + l].sum())
             keep[b : b + l] = False

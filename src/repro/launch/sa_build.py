@@ -4,6 +4,9 @@
     PYTHONPATH=src python -m repro.launch.sa_build --mode doubling --text 100000
     PYTHONPATH=src python -m repro.launch.sa_build --reads 800 --read-len 48 \
         --max-records-per-run 10000      # forces the out-of-core path
+    PYTHONPATH=src python -m repro.launch.sa_build --reads 800 --read-len 48 \
+        --max-records-per-run 10000 --store-backend chunked \
+        --cache-budget 65536             # disk-streamed: bounded resident bytes
 
 Same pipeline the dry-run lowers for 256/512 shards; here it runs on the
 locally available devices.
@@ -13,10 +16,18 @@ budget (``--max-records-per-run``, or an explicit ``--superblocks`` split),
 the launcher routes through ``repro.core.superblock`` — per-superblock
 pipeline runs plus a store-mediated merge — instead of one single-pass run.
 With no budget set the build is single-pass, exactly as before.
+
+Residency policy: ``--store-backend chunked`` keeps the corpus on disk in the
+chunked format (an LRU chunk cache of ``--cache-budget`` bytes the only
+host-resident copy) and spills block SAs, so corpora larger than host RAM
+build.  ``--corpus-file`` names the chunked file: an existing file is built
+as-is (its synthesis flags are ignored); a fresh path gets the synthesized
+corpus serialized there first — and the file is kept for reuse.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 
@@ -26,6 +37,8 @@ def main():
     ap.add_argument("--read-len", type=int, default=64)
     ap.add_argument("--text", type=int, default=0,
                     help="long-text mode with this many tokens")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="corpus synthesis seed (reproducible runs)")
     ap.add_argument("--mode", choices=["scheme", "terasort", "doubling"],
                     default="scheme")
     ap.add_argument("--packing", choices=["base", "bits"], default="base")
@@ -42,14 +55,30 @@ def main():
                     default="kway",
                     help="out-of-core merge: boundary-exact k-way (default) "
                          "or the wholesale re-rank baseline")
+    ap.add_argument("--store-backend", choices=["memory", "chunked"],
+                    default="memory",
+                    help="out-of-core merge store: host-resident corpus "
+                         "(memory) or disk-chunked with a bounded LRU cache")
+    ap.add_argument("--corpus-file", default=None,
+                    help="chunked corpus file: read if it exists, else the "
+                         "synthesized corpus is written there and streamed "
+                         "(implies --store-backend chunked)")
+    ap.add_argument("--cache-budget", type=int, default=0,
+                    help="chunked-backend resident-byte budget, store cache "
+                         "+ merge frontier (0 = 64 MiB default)")
+    ap.add_argument("--chunk-records", type=int, default=0,
+                    help="corpus items per on-disk chunk when serializing "
+                         "(0 = derive from the cache budget)")
     args = ap.parse_args()
 
     import numpy as np
 
     from repro.config import SAConfig, SuperblockConfig
     from repro.core.prefix_doubling import build_suffix_array_doubling
+    from repro.core.store import DEFAULT_CACHE_BUDGET
     from repro.core.superblock import build_suffix_array_auto, plan_superblocks
     from repro.core.terasort import build_suffix_array_terasort
+    from repro.data.chunk_store import chunk_items_for_budget, write_chunked_corpus
     from repro.data.corpus import (
         flatten_reads_with_separators,
         synth_dna_reads,
@@ -57,18 +86,51 @@ def main():
     )
 
     cfg = SAConfig(vocab_size=4, packing=args.packing, samples_per_shard=512)
-    if args.text:
-        corpus, _ = synth_token_corpus(args.text, 4, seed=0)
-    else:
-        corpus = synth_dna_reads(args.reads, args.read_len, seed=0,
-                                 paired_end=args.paired_end)
+    store_backend = args.store_backend
+    if args.corpus_file:
+        store_backend = "chunked"
+    corpus = None
+    if not (args.corpus_file and os.path.exists(args.corpus_file)):
+        if args.text:
+            corpus, _ = synth_token_corpus(args.text, 4, seed=args.seed)
+        else:
+            corpus = synth_dna_reads(args.reads, args.read_len, seed=args.seed,
+                                     paired_end=args.paired_end)
 
     sb = SuperblockConfig(
         num_superblocks=args.superblocks,
         max_records_per_run=args.max_records_per_run,
         merge_backend=args.merge_backend,
         merge_algorithm=args.merge_algorithm,
+        store_backend=store_backend,
+        chunk_records=args.chunk_records,
+        cache_budget_bytes=args.cache_budget,
     )
+
+    source = corpus
+    if args.corpus_file:
+        if corpus is not None:  # fresh path: serialize once, then stream
+            items = corpus.shape[0]
+            row_len = 1 if corpus.ndim == 1 else corpus.shape[1]
+            # shared derivation with the in-process build: the written
+            # chunks are guaranteed to fit the backend's LRU half-budget
+            budget = (args.cache_budget if args.cache_budget > 0
+                      else DEFAULT_CACHE_BUDGET)
+            chunk_items = args.chunk_records or chunk_items_for_budget(
+                items, row_len, budget)
+            meta = write_chunked_corpus(corpus, args.corpus_file,
+                                        chunk_items=chunk_items)
+            print(f"wrote {args.corpus_file}: {meta.items} items x "
+                  f"{meta.row_len}, {meta.num_chunks} chunks of "
+                  f"{meta.chunk_items}")
+        source = args.corpus_file
+
+    if args.mode in ("terasort", "doubling") and corpus is None:
+        # these modes are in-core only: materialize the existing corpus file
+        from repro.data.chunk_store import ChunkedCorpusReader
+
+        with ChunkedCorpusReader(args.corpus_file) as r:
+            corpus = r.read_items(0, r.meta.items)
 
     t0 = time.perf_counter()
     if args.mode == "terasort":
@@ -76,23 +138,34 @@ def main():
     elif args.mode == "doubling":
         # a reads corpus must keep its read boundaries: separate the reads
         # with $ tokens so no suffix comparison spans a read and the result
-        # is comparable to scheme/terasort on the same corpus.
-        flat = (corpus if args.text
+        # is comparable to scheme/terasort on the same corpus.  Mode is
+        # decided by the corpus itself (an existing --corpus-file may be
+        # text even when --text was not passed).
+        flat = (corpus if corpus.ndim == 1
                 else flatten_reads_with_separators(corpus))
         res = build_suffix_array_doubling(flat, cfg=cfg)
     else:
-        plan = plan_superblocks(np.shape(corpus), cfg, sb)
+        from repro.core.superblock import corpus_shape_of
+
+        plan = plan_superblocks(corpus_shape_of(source), cfg, sb)
         if plan.num_superblocks > 1:
             print(f"out-of-core: {plan.total_records} records > "
                   f"{plan.capacity_records}/run -> "
-                  f"{plan.num_superblocks} superblocks")
-        res = build_suffix_array_auto(corpus, cfg=cfg, sb=sb)
+                  f"{plan.num_superblocks} superblocks "
+                  f"({sb.store_backend} store backend)")
+        res = build_suffix_array_auto(source, cfg=cfg, sb=sb)
     dt = time.perf_counter() - t0
     n = res.stats["num_suffixes"]
     print(f"mode={args.mode} suffixes={n} time={dt:.2f}s "
           f"({n / dt:.0f} suffixes/s)")
     for k, v in res.footprint.units().items():
         print(f"  {k:>17}: {v if isinstance(v, int) else round(v, 3)}")
+    if res.stats.get("store_backend") == "chunked":
+        print(f"streaming: peak_resident={res.footprint.peak_resident_bytes}B "
+              f"of corpus={res.stats['corpus_bytes']}B, cache hit rate "
+              f"{res.stats['store_cache_hit_rate']:.2f}, "
+              f"{res.stats['spilled_runs']} spilled runs "
+              f"({res.stats['spilled_bytes']}B)")
     print(f"stats: {res.stats}")
 
 

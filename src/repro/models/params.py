@@ -53,7 +53,7 @@ def init_params(defs, key, dtype=jnp.float32):
     """Materialize a ParamDef tree into real arrays."""
     leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
     keys = jax.random.split(key, max(len(leaves), 1))
-    vals = [_materialize(d, k, dtype) for d, k in zip(leaves, keys)]
+    vals = [_materialize(d, k, dtype) for d, k in zip(leaves, keys, strict=True)]
     return jax.tree.unflatten(treedef, vals)
 
 

@@ -353,7 +353,7 @@ def decode_step_windowed(cfg: ArchConfig, params, cache, tokens, pos):
     new_cache = dict(cache)
     for i in range(cfg.num_layers):
         name = f"layer_{i:02d}"
-        p = jax.tree.map(lambda t: t[i].astype(cdt), params["blocks"])
+        p = jax.tree.map(lambda t, i=i: t[i].astype(cdt), params["blocks"])
         cl = cache[name]
         w = cl["k"].shape[1]
         a_in = layers.rmsnorm(p["ln_attn"], x, cfg.norm_eps)

@@ -26,7 +26,7 @@ from repro.config import ArchConfig, MeshConfig, ShardingPolicy
 
 
 def _axis_sizes(mesh: Mesh) -> dict:
-    return dict(zip(mesh.axis_names, mesh.devices.shape))
+    return dict(zip(mesh.axis_names, mesh.devices.shape, strict=True))
 
 
 def _candidates(logical: Optional[str], policy: ShardingPolicy):

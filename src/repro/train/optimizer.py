@@ -93,7 +93,7 @@ def adamw_update(tcfg: TrainConfig, params, grads, opt):
     flat_v = treedef.flatten_up_to(opt["v"])
     flat_ma = treedef.flatten_up_to(opt["master"])
     new_m, new_v, new_ma = [], [], []
-    for g, m, v, ma in zip(flat_g, flat_m, flat_v, flat_ma):
+    for g, m, v, ma in zip(flat_g, flat_m, flat_v, flat_ma, strict=True):
         m2, v2, ma2 = upd(g, m, v, ma)
         new_m.append(m2)
         new_v.append(v2)

@@ -76,7 +76,7 @@ def test_window_at_matches_slicing():
     offs = np.array([0, 5, 11, 2], np.int32)
     k = 6
     win = np.asarray(encoding.window_at(jnp.asarray(reads), jnp.asarray(rows), jnp.asarray(offs), k))
-    for i, (r, o) in enumerate(zip(rows, offs)):
+    for i, (r, o) in enumerate(zip(rows, offs, strict=True)):
         expect = np.zeros(k, np.int32)
         seg = reads[r, o : o + k]
         expect[: len(seg)] = seg

@@ -72,7 +72,7 @@ def test_microbatch_accumulation_matches_full_batch():
     assert outs[1][1] == pytest.approx(outs[2][1], rel=1e-5)
     l1 = jax.tree.leaves(outs[1][0].params)
     l2 = jax.tree.leaves(outs[2][0].params)
-    for a, b in zip(l1, l2):
+    for a, b in zip(l1, l2, strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
                                    atol=1e-5)
 

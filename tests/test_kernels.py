@@ -62,7 +62,7 @@ def test_bitonic_sort_tiles(n, tile):
     v = rng.permutation(n).astype(np.int32)
     got = ops.bitonic_sort_tiles(*map(jnp.asarray, (kh, kl, v)), tile=tile)
     want = ref.bitonic_sort_tiles_ref(*map(jnp.asarray, (kh, kl, v)), tile=tile)
-    for g, w in zip(got[:2], want[:2]):
+    for g, w in zip(got[:2], want[:2], strict=True):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
     # values: same multiset per (kh, kl) group within each tile
     gk = np.stack([np.asarray(x) for x in got], 1)

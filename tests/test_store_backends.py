@@ -1,0 +1,278 @@
+"""Store backends: chunked-file vs in-memory equivalence + residency.
+
+ISSUE 3 satellite coverage: the ``ChunkedFileBackend`` must serve windows
+byte-identical to ``InMemoryBackend`` for arbitrary (gidx, depth) sets —
+including windows straddling chunk edges and the corpus tail (hypothesis
+property, via the compat shim) — while its LRU cache never exceeds the
+resident-byte budget; plus the ``WindowCursor`` eviction paths
+(``release``/``release_all``/``offer``) and the chunked on-disk format
+roundtrip.
+"""
+import os
+import shutil
+import tempfile
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.config import SAConfig
+from repro.core.store import (
+    ChunkedFileBackend,
+    CorpusStore,
+    InMemoryBackend,
+    WindowCursor,
+    index_request_bytes,
+)
+from repro.data.chunk_store import (
+    ChunkedCorpusReader,
+    read_chunked_corpus_meta,
+    write_chunked_corpus,
+)
+
+CFG = SAConfig(vocab_size=4, chars_per_word=2, key_words=2)  # K = 4
+
+
+# ---------------------------------------------------------------------------
+# on-disk format
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_corpus_roundtrip_text(tmp_path):
+    rng = np.random.default_rng(0)
+    text = rng.integers(1, 5, size=(101,)).astype(np.int32)  # partial tail
+    p = str(tmp_path / "t.sachunk")
+    meta = write_chunked_corpus(text, p, chunk_items=16)
+    assert meta.text_mode and meta.items == 101 and meta.num_chunks == 7
+    assert read_chunked_corpus_meta(p) == meta
+    with ChunkedCorpusReader(p) as r:
+        np.testing.assert_array_equal(r.read_items(0, 101), text)
+        np.testing.assert_array_equal(r.read_items(20, 35), text[20:35])
+        # tail chunk is short; halo past the end is zero-padded
+        tail = r.read_chunk(6, halo=4)
+        np.testing.assert_array_equal(tail[:5], text[96:])
+        assert (tail[5:] == 0).all()
+
+
+def test_chunked_corpus_roundtrip_reads(tmp_path):
+    rng = np.random.default_rng(1)
+    reads = rng.integers(1, 5, size=(23, 9)).astype(np.int32)
+    p = str(tmp_path / "r.sachunk")
+    meta = write_chunked_corpus(reads, p, chunk_items=5)
+    assert not meta.text_mode and meta.row_len == 9
+    with ChunkedCorpusReader(p) as r:
+        np.testing.assert_array_equal(r.read_items(0, 23), reads)
+        np.testing.assert_array_equal(r.read_chunk(4), reads[20:])
+        with pytest.raises(ValueError):
+            r.read_chunk(0, halo=2)  # rows are atomic: no halo in reads mode
+
+
+def test_chunked_corpus_rejects_garbage(tmp_path):
+    p = str(tmp_path / "bad")
+    with open(p, "wb") as f:
+        f.write(b"not a chunked corpus, definitely")
+    with pytest.raises(ValueError):
+        read_chunked_corpus_meta(p)
+
+
+# ---------------------------------------------------------------------------
+# backend equivalence (the byte-exactness acceptance property)
+# ---------------------------------------------------------------------------
+
+
+def _backends_text(tmp_path_str, text, chunk_items, budget=1 << 16):
+    mem = InMemoryBackend(text, CFG)
+    p = os.path.join(tmp_path_str, "c.sachunk")
+    write_chunked_corpus(text, p, chunk_items=chunk_items)
+    return mem, ChunkedFileBackend(p, CFG, cache_budget_bytes=budget)
+
+
+def test_chunk_edge_and_tail_windows_exact(tmp_path):
+    """Deterministic edge cases: windows starting at / straddling a chunk
+    boundary, and windows running past the corpus tail."""
+    rng = np.random.default_rng(2)
+    text = rng.integers(1, 5, size=(50,)).astype(np.int32)
+    mem, ch = _backends_text(str(tmp_path), text, chunk_items=8)
+    cases = [(7, 0), (8, 0), (6, 0), (15, 0), (49, 0), (47, 0),
+             (0, 12), (40, 2), (49, 13)]
+    for g, d in cases:
+        gi = np.array([g], np.int64)
+        dd = np.array([d], np.int64)
+        np.testing.assert_array_equal(
+            mem.gather(gi, dd), ch.gather(gi, dd), err_msg=f"(g={g}, d={d})")
+
+
+@given(
+    n=st.integers(2, 120),
+    chunk_items=st.integers(1, 40),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=30, deadline=None)
+def test_property_chunked_text_windows_match_memory(n, chunk_items, seed):
+    # no pytest fixtures here: @given examples manage their own tmp dir
+    # (the hypothesis compat shim cannot inject fixtures)
+    rng = np.random.default_rng(seed)
+    text = rng.integers(1, 5, size=(n,)).astype(np.int32)
+    d = tempfile.mkdtemp(prefix="sachunk_prop_")
+    try:
+        mem, ch = _backends_text(d, text, chunk_items=min(chunk_items, n))
+        m = 64
+        gidx = rng.integers(0, n, size=(m,)).astype(np.int64)
+        # bias some requests onto chunk edges and the corpus tail
+        edges = np.arange(0, n, max(1, min(chunk_items, n)), dtype=np.int64)
+        gidx[: min(m, edges.size)] = edges[: min(m, edges.size)]
+        gidx[-1] = n - 1
+        depth = rng.integers(0, mem.max_len // mem.k + 2,
+                             size=(m,)).astype(np.int64)
+        np.testing.assert_array_equal(mem.gather(gidx, depth),
+                                      ch.gather(gidx, depth))
+        ch.close()
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+@given(
+    r=st.integers(1, 40),
+    l=st.integers(1, 12),
+    chunk_items=st.integers(1, 16),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=30, deadline=None)
+def test_property_chunked_reads_windows_match_memory(r, l, chunk_items, seed):
+    rng = np.random.default_rng(seed)
+    reads = rng.integers(1, 5, size=(r, l)).astype(np.int32)
+    mem = InMemoryBackend(reads, CFG)
+    d = tempfile.mkdtemp(prefix="sachunk_prop_")
+    try:
+        p = os.path.join(d, "c.sachunk")
+        write_chunked_corpus(reads, p, chunk_items=min(chunk_items, r))
+        ch = ChunkedFileBackend(p, CFG, cache_budget_bytes=1 << 16)
+        m = 64
+        row = rng.integers(0, r, size=(m,)).astype(np.int64)
+        off = rng.integers(0, l + 1, size=(m,)).astype(np.int64)
+        gidx = (row << mem.stride_bits) | off
+        depth = rng.integers(0, mem.max_len // mem.k + 2,
+                             size=(m,)).astype(np.int64)
+        np.testing.assert_array_equal(mem.gather(gidx, depth),
+                                      ch.gather(gidx, depth))
+        ch.close()
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# LRU residency bound
+# ---------------------------------------------------------------------------
+
+
+def test_lru_cache_respects_budget_and_counts(tmp_path):
+    rng = np.random.default_rng(3)
+    text = rng.integers(1, 5, size=(128,)).astype(np.int32)
+    p = str(tmp_path / "c.sachunk")
+    write_chunked_corpus(text, p, chunk_items=16)  # 8 chunks, 80 B resident ea
+    budget = 200  # fits 2 chunks (with halo), not 3
+    ch = ChunkedFileBackend(p, CFG, cache_budget_bytes=budget)
+    peak = 0
+    for g in range(0, 128, 4):
+        ch.gather(np.array([g], np.int64), np.array([0], np.int64))
+        assert ch.resident_bytes <= budget
+        peak = max(peak, ch.resident_bytes)
+    assert peak > 0
+    assert ch.evictions > 0  # the budget actually forced evictions
+    # sequential sweep revisits each chunk 4x: hits must dominate misses
+    assert ch.cache_hits > ch.cache_misses
+    assert ch.cache_misses >= 8  # every chunk loaded at least once
+    # a budget that cannot hold even one chunk is a configuration error
+    with pytest.raises(ValueError):
+        ChunkedFileBackend(p, CFG, cache_budget_bytes=16)
+
+
+def test_lru_eviction_order_is_least_recent(tmp_path):
+    text = np.arange(1, 65, dtype=np.int32) % 4 + 1
+    p = str(tmp_path / "c.sachunk")
+    write_chunked_corpus(text, p, chunk_items=16)  # 4 chunks
+    ch = ChunkedFileBackend(p, CFG, cache_budget_bytes=200)  # 2 chunks max
+
+    def touch(g):
+        ch.gather(np.array([g], np.int64), np.array([0], np.int64))
+
+    touch(0)   # chunk 0: miss
+    touch(16)  # chunk 1: miss (cache: 0, 1)
+    touch(0)   # chunk 0: hit, refreshed
+    touch(32)  # chunk 2: miss, evicts chunk 1 (least recent)
+    assert ch.cache_misses == 3 and ch.cache_hits == 1
+    touch(0)   # still cached
+    assert ch.cache_hits == 2
+    touch(16)  # chunk 1 was evicted: miss again
+    assert ch.cache_misses == 4
+
+
+# ---------------------------------------------------------------------------
+# WindowCursor eviction paths + store frontier accounting
+# ---------------------------------------------------------------------------
+
+
+def _cursor_store(text=None):
+    if text is None:
+        text = np.ones(24, np.int32)  # all-equal: deep windows available
+    store = CorpusStore(text, CFG, request_capacity=64)
+    return store, WindowCursor(store)
+
+
+def test_cursor_release_returns_frontier_bytes():
+    store, cur = _cursor_store()
+    cur.prefetch(np.array([0, 1, 2], np.int64))
+    assert cur.cached_windows == 3
+    assert store.frontier_bytes == 3 * cur.window_bytes
+    cur.window(0, 2)  # deepen suffix 0 to depth 2 (two more windows)
+    assert cur.cached_windows == 5
+    cur.release(0)  # whole chain (3 windows) released at once
+    assert cur.cached_windows == 2
+    assert store.frontier_bytes == 2 * cur.window_bytes
+    cur.release(0)  # double release is a no-op
+    assert cur.cached_windows == 2
+    cur.release_all()
+    assert cur.cached_windows == 0 and store.frontier_bytes == 0
+    # peak kept the high-water mark
+    assert cur.peak_cached_windows == 5
+    assert store.peak_resident_bytes >= store.backend.resident_bytes
+
+
+def test_cursor_offer_rejects_gaps_and_accounts():
+    store, cur = _cursor_store()
+    w = np.ones(store.k, np.int32)
+    pre = store.requests
+    cur.offer(7, 1, w)  # depth 1 before depth 0: ignored
+    assert cur.cached_windows == 0
+    cur.offer(7, 0, w)
+    cur.offer(7, 1, w)
+    cur.offer(7, 3, w)  # gap (depth 2 missing): ignored
+    cur.offer(7, 1, w)  # duplicate depth: ignored
+    assert cur.cached_windows == 2
+    assert store.frontier_bytes == 2 * cur.window_bytes
+    assert store.requests == pre  # offers never hit the store
+    # offered windows are re-served without a fetch
+    np.testing.assert_array_equal(cur.window(7, 1), w)
+    assert store.requests == pre
+    cur.release(7)
+    assert cur.cached_windows == 0 and store.frontier_bytes == 0
+
+
+def test_cursor_offered_window_is_an_owned_copy():
+    store, cur = _cursor_store()
+    w = np.ones(store.k, np.int32)
+    cur.offer(9, 0, w)
+    w[:] = 99  # mutating the caller's buffer must not corrupt the cache
+    assert (cur.window(9, 0) == 1).all()
+
+
+def test_index_request_bytes_derivation():
+    # 31-bit address spaces ship one int32 word; wider ship two
+    assert index_request_bytes(480, 0) == 4
+    assert index_request_bytes(48, 4) == 4
+    assert index_request_bytes(1 << 28, 4) == 8  # 28 + 4 bits > 31
+    # CorpusStore derives its own width and accounts with it
+    store, _ = _cursor_store()
+    store.fetch_windows(np.arange(6, dtype=np.int64), 0)
+    assert store.index_bytes == 4
+    assert store.request_bytes == 6 * store.index_bytes

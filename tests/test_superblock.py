@@ -11,10 +11,18 @@ on the same corpora while moving >= 3x fewer merge-fetch bytes than the
 re-rank baseline at equal config, on the host and device merge backends
 alike; ``plan_superblocks`` must warn with the correct cause; and
 ``_less_than`` must not re-fetch pivot windows per capacity chunk.
+
+ISSUE 3 adds the disk-streamed store: ``store_backend="chunked"`` must
+produce an SA oracle-identical to the in-memory backend at >= 3 superblocks
+(reads and text), while ``Footprint.peak_resident_bytes`` — LRU chunk cache
++ merge frontier — stays under the configured cache budget and strictly
+under the corpus size for a corpus >= 4x the budget.
 """
+import os
 import warnings
 
 import numpy as np
+import pytest
 
 from repro.config import SAConfig, SuperblockConfig
 from repro.core.oracle import doubling_sa_text, naive_sa_reads, naive_sa_text
@@ -23,8 +31,10 @@ from repro.core.superblock import (
     _less_than,
     build_suffix_array_auto,
     build_suffix_array_superblock,
+    corpus_shape_of,
     plan_superblocks,
 )
+from repro.data.chunk_store import write_chunked_corpus
 
 CFG = SAConfig(vocab_size=4, chars_per_word=2, key_words=2)  # K=4: forces rounds
 
@@ -238,6 +248,141 @@ def test_less_than_pivot_window_cached_across_chunks():
     assert one_chunk.requests == 41
     assert chunked.requests == 41  # no per-chunk pivot re-fetch
     assert chunked.request_bytes == one_chunk.request_bytes
+    # ISSUE 3: request bytes are derived from the index width (a 20-token
+    # text store addresses in one int31 word = 4 B), not a hard-coded 8 B
+    assert one_chunk.index_bytes == 4
+    assert one_chunk.request_bytes == 41 * one_chunk.index_bytes
+
+
+# ---------------------------------------------------------------------------
+# disk-streamed store backend (ISSUE 3 acceptance)
+# ---------------------------------------------------------------------------
+
+
+def _streamed(corpus, superblocks, budget, **kw):
+    sb = SuperblockConfig(num_superblocks=superblocks, store_backend="chunked",
+                          cache_budget_bytes=budget, **kw)
+    return build_suffix_array_superblock(corpus, cfg=CFG, sb=sb)
+
+
+def test_streaming_reads_oracle_identical_and_budget_bounded():
+    """The acceptance property: chunked backend, >= 3 superblocks, corpus
+    >= 4x the cache budget -> SA identical to the in-memory backend (and the
+    oracle) with peak resident bytes under the budget and strictly under the
+    corpus size."""
+    rng = np.random.default_rng(10)
+    reads = rng.integers(1, 5, size=(256, 16)).astype(np.int32)
+    corpus_bytes = reads.size * 4
+    budget = corpus_bytes // 4
+    res = _streamed(reads, 4, budget)
+    mem = build_suffix_array_superblock(
+        reads, cfg=CFG, sb=SuperblockConfig(num_superblocks=4))
+    np.testing.assert_array_equal(res.suffix_array, mem.suffix_array)
+    np.testing.assert_array_equal(res.suffix_array, naive_sa_reads(reads))
+    assert res.stats["store_backend"] == "chunked"
+    assert res.stats["corpus_bytes"] == corpus_bytes
+    assert 0 < res.footprint.peak_resident_bytes <= budget
+    assert res.footprint.peak_resident_bytes < corpus_bytes
+    # the record bound still holds out-of-core
+    _check_bounded(res, plan_superblocks(reads.shape, CFG,
+                                         SuperblockConfig(num_superblocks=4)))
+    # block SAs were spilled: one run per superblock at least
+    assert res.stats["spilled_runs"] >= 4
+    # the in-memory backend, by contrast, keeps the whole corpus resident
+    assert mem.footprint.peak_resident_bytes > corpus_bytes
+
+
+def test_streaming_text_oracle_identical_and_budget_bounded():
+    rng = np.random.default_rng(11)
+    text = rng.integers(1, 5, size=(1024,)).astype(np.int32)
+    corpus_bytes = text.size * 4
+    budget = corpus_bytes // 4
+    res = _streamed(text, 4, budget)
+    np.testing.assert_array_equal(res.suffix_array, doubling_sa_text(text))
+    assert 0 < res.footprint.peak_resident_bytes <= budget
+    assert res.footprint.peak_resident_bytes < corpus_bytes
+    assert res.stats["spilled_runs"] >= 3  # exact runs + risk pieces
+
+
+def test_streaming_repetitive_reads_budget_bounded():
+    """Identical ATAT reads: deep ties, but bounded by the read length — the
+    residency bound must survive the merge's worst reads-mode case."""
+    reads = np.tile(np.array([1, 2] * 6, np.int32), (48, 1))
+    corpus_bytes = reads.size * 4
+    budget = corpus_bytes // 4
+    res = _streamed(reads, 3, budget)
+    np.testing.assert_array_equal(res.suffix_array, naive_sa_reads(reads))
+    assert res.footprint.peak_resident_bytes <= budget
+
+
+def test_streaming_repetitive_text_correct():
+    """Fully repetitive *text* pins a floor under the frontier (one deep tie
+    chains O(n/K) windows), so only correctness is asserted — the residency
+    model documents the degenerate case (docs/out_of_core.md)."""
+    text = np.tile(np.array([1, 2], np.int32), 180)
+    res = _streamed(text, 3, text.size * 4 * 4)
+    np.testing.assert_array_equal(res.suffix_array, naive_sa_text(text))
+
+
+def test_streaming_from_corpus_file(tmp_path):
+    """A chunked corpus file path is a first-class corpus argument: built
+    without ever materializing the corpus host-side, same SA."""
+    rng = np.random.default_rng(12)
+    reads = rng.integers(1, 5, size=(96, 12)).astype(np.int32)
+    p = str(tmp_path / "corpus.sachunk")
+    write_chunked_corpus(reads, p, chunk_items=8)  # chunks fit the LRU half
+    assert corpus_shape_of(p) == (96, 12)
+    budget = reads.size * 4 // 4
+    res = build_suffix_array_superblock(p, cfg=CFG, sb=SuperblockConfig(
+        num_superblocks=3, cache_budget_bytes=budget))
+    np.testing.assert_array_equal(res.suffix_array, naive_sa_reads(reads))
+    assert res.stats["store_backend"] == "chunked"
+    assert res.footprint.peak_resident_bytes <= budget
+    # auto entry point routes paths too (single-pass materializes)
+    single = build_suffix_array_auto(p, cfg=CFG, sb=SuperblockConfig())
+    np.testing.assert_array_equal(single.suffix_array, res.suffix_array)
+
+
+def test_streaming_variable_length_reads(tmp_path):
+    rng = np.random.default_rng(13)
+    lens = rng.integers(0, 11, size=(30,)).astype(np.int32)
+    reads = np.zeros((30, 11), np.int32)
+    for i, n in enumerate(lens):
+        reads[i, :n] = rng.integers(1, 5, size=(n,))
+    res = build_suffix_array_superblock(
+        reads, lengths=lens, cfg=CFG,
+        sb=SuperblockConfig(num_superblocks=3, store_backend="chunked"))
+    np.testing.assert_array_equal(res.suffix_array, naive_sa_reads(reads, lens))
+
+
+def test_streaming_scratch_is_cleaned_up(tmp_path):
+    rng = np.random.default_rng(14)
+    text = rng.integers(1, 5, size=(360,)).astype(np.int32)
+    res = build_suffix_array_superblock(text, cfg=CFG, sb=SuperblockConfig(
+        num_superblocks=3, store_backend="chunked",
+        spill_dir=str(tmp_path)))
+    np.testing.assert_array_equal(res.suffix_array, doubling_sa_text(text))
+    assert os.listdir(str(tmp_path)) == []  # scratch subdir removed
+
+
+def test_streaming_rejects_device_merge_backend():
+    rng = np.random.default_rng(15)
+    reads = rng.integers(1, 5, size=(48, 12)).astype(np.int32)
+    with pytest.raises(ValueError, match="HBM-resident"):
+        build_suffix_array_superblock(reads, cfg=CFG, sb=SuperblockConfig(
+            num_superblocks=3, store_backend="chunked",
+            merge_backend="device"))
+
+
+def test_streaming_rerank_baseline_also_bounded():
+    """merge_algorithm="rerank" over the chunked backend: no cursor frontier
+    at all, so residency reduces to the LRU cache alone."""
+    rng = np.random.default_rng(16)
+    reads = rng.integers(1, 5, size=(128, 16)).astype(np.int32)
+    budget = reads.size * 4 // 4
+    res = _streamed(reads, 3, budget, merge_algorithm="rerank")
+    np.testing.assert_array_equal(res.suffix_array, naive_sa_reads(reads))
+    assert res.footprint.peak_resident_bytes <= budget
 
 
 def test_auto_routes_by_budget():

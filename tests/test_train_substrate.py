@@ -37,7 +37,7 @@ def test_wsd_schedule_shape():
     assert abs(lrs[10] - 1.0) < 1e-6  # plateau
     assert abs(lrs[39] - 1.0) < 1e-6  # still stable
     assert lrs[60] == pytest.approx(0.1, abs=1e-6)  # decayed to min ratio
-    assert all(a >= b - 1e-9 for a, b in zip(lrs[40:], lrs[41:]))  # monotone decay
+    assert all(a >= b - 1e-9 for a, b in zip(lrs[40:], lrs[41:], strict=False))  # monotone decay
 
 
 def test_cosine_schedule_monotone_after_warmup():
