@@ -2,11 +2,16 @@
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run footprint  # one section
+    PYTHONPATH=src python -m benchmarks.run merge --json BENCH_merge.json
 
 Each section prints CSV (name,value columns) so EXPERIMENTS.md tables can be
-regenerated from the output.
+regenerated from the output.  ``--json PATH`` additionally records the
+machine-readable perf trajectory: per section, the wall time and the rows the
+section returned (the ``merge``/``streaming``/``superblock`` sections include
+store round-trips and peak resident bytes per run) — diffable across commits.
 """
-import sys
+import argparse
+import json
 import time
 
 
@@ -24,13 +29,34 @@ def main() -> None:
         "superblock": scaling.run_out_of_core,
         # disk-streamed store backend smoke (SA equality + residency bound)
         "streaming": scaling.run_streaming,
+        # merge-path tile merge vs heap walk (round-trip ratio gate)
+        "merge": scaling.run_merge,
     }
-    pick = sys.argv[1:] or list(sections)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("sections", nargs="*", metavar="SECTION",
+                    help=f"sections to run (default: all): "
+                         f"{', '.join(sections)}")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write per-section wall time + result rows as JSON")
+    args = ap.parse_args()
+    unknown = [s for s in args.sections if s not in sections]
+    if unknown:
+        ap.error(f"unknown section(s) {unknown}; pick from {list(sections)}")
+    pick = args.sections or list(sections)
+    record = {}
     t0 = time.time()
     for name in pick:
         print(f"\n===== {name} =====")
-        sections[name]()
-    print(f"\n# total bench time: {time.time() - t0:.1f}s")
+        ts = time.time()
+        rows = sections[name]()
+        record[name] = {"wall_s": round(time.time() - ts, 3), "rows": rows}
+    total = time.time() - t0
+    print(f"\n# total bench time: {total:.1f}s")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"total_s": round(total, 3), "sections": record},
+                      f, indent=2, default=repr)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -78,7 +78,8 @@ def run_out_of_core(sizes=(200, 400), read_len=24, superblocks=4, csv=True,
       that ratio raises, failing the CI smoke.
     """
     cfg = SAConfig(vocab_size=4, packing="base")
-    sb = SuperblockConfig(num_superblocks=superblocks)
+    sb = SuperblockConfig(num_superblocks=superblocks,
+                          merge_algorithm="kway")
     sb_rerank = SuperblockConfig(num_superblocks=superblocks,
                                  merge_algorithm="rerank")
     rows = []
@@ -125,6 +126,80 @@ def run_out_of_core(sizes=(200, 400), read_len=24, superblocks=4, csv=True,
                   f"{r['single_s']:.2f},{r['ooc_s']:.2f},"
                   f"{r['ooc_merge_bytes']},{r['rerank_merge_bytes']},"
                   f"{r['merge_ratio']:.2f}")
+    return rows
+
+
+def run_merge(csv=True, min_roundtrip_ratio=5.0):
+    """Merge-path tile merge vs the PR-2 heap walk (ISSUE 5 acceptance).
+
+    The same out-of-core corpora merged with ``merge_algorithm="merge_path"``
+    (batched tile rounds, no host heap) vs ``"kway"`` (heap walk with
+    per-comparison cursor fetches) vs ``"rerank"``.  Checked loudly, failing
+    CI on regression:
+
+    * all three algorithms produce the **identical suffix array**;
+    * merge_path makes at least ``min_roundtrip_ratio`` x fewer store
+      round-trips than the k-way heap walk at equal config (*round-trips*,
+      not bytes: bytes stay comparable, the calls collapse by the tile
+      width).
+
+    Rows record wall-time, merge store round-trips/requests/bytes, and peak
+    resident bytes per run — the machine-readable perf trajectory consumed
+    by ``benchmarks.run --json``.
+    """
+    from repro.core.superblock import build_suffix_array_superblock
+
+    cfg = SAConfig(vocab_size=4, packing="base")
+    cases = (
+        ("reads_random", synth_dna_reads(96, 16, seed=3), 4),
+        ("reads_repetitive", np.tile(np.array([1, 2] * 6, np.int32), (48, 1)), 3),
+        ("text_random", synth_token_corpus(768, 4, seed=3)[0], 4),
+    )
+    rows = []
+    for name, corpus, s in cases:
+        per_alg = {}
+        ref = None
+        for alg in ("merge_path", "kway", "rerank"):
+            sb = SuperblockConfig(num_superblocks=s, merge_algorithm=alg)
+            t0 = time.perf_counter()
+            res = build_suffix_array_superblock(corpus, cfg=cfg, sb=sb)
+            wall = time.perf_counter() - t0
+            if ref is None:
+                ref = res.suffix_array
+            elif not np.array_equal(res.suffix_array, ref):
+                raise AssertionError(
+                    f"merge regression: {alg} SA differs from merge_path "
+                    f"on the {name} corpus")
+            per_alg[alg] = dict(
+                wall_s=wall,
+                roundtrips=res.stats["merge_fetch_rounds"],
+                requests=res.stats["merge_fetch_requests"],
+                bytes=res.stats["merge_fetch_bytes"],
+                peak_resident_bytes=res.footprint.peak_resident_bytes,
+            )
+        ratio = per_alg["kway"]["roundtrips"] / max(
+            per_alg["merge_path"]["roundtrips"], 1)
+        if ratio < min_roundtrip_ratio:
+            raise AssertionError(
+                f"merge round-trip regression: merge_path made "
+                f"{per_alg['merge_path']['roundtrips']} store round-trips vs "
+                f"kway {per_alg['kway']['roundtrips']} (ratio {ratio:.2f}x < "
+                f"{min_roundtrip_ratio}x) on the {name} corpus")
+        row = dict(corpus=name, suffixes=int(ref.shape[0]),
+                   roundtrip_ratio=ratio)
+        for alg, metrics in per_alg.items():
+            for k, v in metrics.items():
+                row[f"{alg}_{k}"] = v
+        rows.append(row)
+    if csv:
+        print("# device-resident merge-path tile merge vs heap-walk k-way vs "
+              "re-rank — identical SA, >= 5x fewer store round-trips")
+        cols = list(rows[0].keys())
+        print(",".join(cols))
+        for r in rows:
+            print(",".join(
+                f"{r[c]:.2f}" if isinstance(r[c], float) else str(r[c])
+                for c in cols))
     return rows
 
 
@@ -195,3 +270,4 @@ if __name__ == "__main__":
     run_pathological()
     run_out_of_core()
     run_streaming()
+    run_merge()

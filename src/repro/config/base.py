@@ -326,15 +326,27 @@ class SuperblockConfig:
       local SA (clamped so the pooled sample also fits one superblock).
     ``request_capacity``: merge-time store fetch batch size (requests per
       round; overflowing tie groups retry group-synchronously).
-    ``merge_algorithm``: how buckets are ordered during the merge.
-      * ``"kway"`` (default) — splitter ranks are located inside each sorted
-        block run by O(log n) binary-search store comparisons and the runs
-        are k-way merged at run heads, fetching comparison windows only to
+    ``merge_algorithm``: how the sorted block runs are merged.
+      * ``"merge_path"`` (default) — batched merge-path tile merge: per
+        tile, every run's next heads are fetched in one batched store call,
+        packed to order-preserving key words, tie groups escalated together
+        (batched deeper fetches, or one ``DeviceRefiner`` call on the
+        device backend), and every candidate's output rank computed at once
+        (``kernels/merge_path`` Pallas kernel under ``cfg.use_pallas``, the
+        numpy ``CorpusStore.rank_windows`` reference otherwise).  No host
+        heap walk — store round-trips collapse by the tile width (>= 5x
+        fewer than ``kway``, asserted in tests + ``benchmarks.run merge``).
+      * ``"kway"`` — the PR-2 path: splitter ranks located inside each
+        sorted run by O(log n) binary-search store comparisons, runs k-way
+        merged at run heads through a host heap, windows fetched to
         tie-breaking depth (text mode re-ranks only the block-boundary risk
-        set).
+        set).  Kept as the round-trip reference.
       * ``"rerank"`` — the PR-1 baseline: every bucket is re-ranked from
         scratch by the group-synchronous refinement loop.  Kept as the
         merge-traffic reference (``benchmarks.run superblock``).
+    ``merge_tile``: merge-path output-tile width (buffered run heads per
+      run); 0 derives it — ``capacity_records // num_runs`` capped at 4096,
+      or the frontier read-ahead budget in streaming builds.
     ``merge_backend``: where bucket refinement runs.
       * ``"host"`` (default) — numpy against the host-resident store.
       * ``"device"`` — the refinement loop runs TPU-resident under the same
@@ -361,14 +373,20 @@ class SuperblockConfig:
       bounded by it.  0 = 64 MiB default.
     ``spill_dir``: directory for the chunked build's scratch files (the
       serialized corpus when given an array, per-block SA spills); None = a
-      private temporary directory, removed when the build finishes.
+      private temporary directory, removed when the build finishes.  When
+      set, the out-of-core build also **streams the output SA** there:
+      merge pieces are emitted in final order straight into a preallocated
+      ``{spill_dir}/suffix_array.npy`` disk memmap, which is returned as
+      ``SAResult.suffix_array`` — no O(n) host output allocation.  The file
+      outlives the build (scratch is still cleaned up).
     """
 
     max_records_per_run: int = 0
     num_superblocks: int = 0
     samples_per_block: int = 32
     request_capacity: int = 4096
-    merge_algorithm: str = "kway"
+    merge_algorithm: str = "merge_path"
+    merge_tile: int = 0
     merge_backend: str = "host"
     store_backend: str = "memory"
     chunk_records: int = 0

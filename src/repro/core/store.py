@@ -92,6 +92,52 @@ def token_bytes(vocab_size: int) -> int:
     return max(1, (max(vocab_size, 1).bit_length() + 7) // 8)
 
 
+def pack_keys_np(windows: np.ndarray, cfg: SAConfig) -> np.ndarray:
+    """Numpy mirror of :func:`repro.core.encoding.pack_words`.
+
+    (..., K) int32 token windows -> (..., key_words) int32 packed key words
+    whose row-lexicographic order equals the token-window order (the same
+    order-preserving packing as the Map-phase ``prefix_pack`` kernel).  This
+    is the single compare representation of the out-of-core merge: the
+    merge-path kernel ranks these words, and the splitter binary search
+    (:class:`WindowCursor`) caches and compares them.
+    """
+    w = np.asarray(windows, np.int64)
+    cpw = cfg.resolved_chars_per_word()
+    n_words = cfg.key_words
+    assert w.shape[-1] == cpw * n_words, (w.shape, cpw * n_words)
+    out = np.empty(w.shape[:-1] + (n_words,), np.int32)
+    if cfg.packing == "base":
+        base = cfg.vocab_size + 1
+        for i in range(n_words):
+            acc = np.zeros(w.shape[:-1], np.int64)
+            for j in range(i * cpw, (i + 1) * cpw):
+                acc = acc * base + w[..., j]
+            out[..., i] = acc.astype(np.int32)
+    else:
+        bits = max(1, int(cfg.vocab_size).bit_length())
+        for i in range(n_words):
+            acc = np.zeros(w.shape[:-1], np.int64)
+            for j in range(i * cpw, (i + 1) * cpw):
+                acc = (acc << bits) | w[..., j]
+            out[..., i] = (acc << (31 - bits * cpw)).astype(np.int32)
+    return out
+
+
+def lex_less_rows(a: np.ndarray, b: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Row-wise lexicographic compare of two (m, W) key-word matrices.
+
+    Returns ``(less, equal)`` bool vectors — the vectorized comparator shared
+    by the cursor's progressive suffix compare and the merge-path driver.
+    """
+    lt = np.zeros(a.shape[0], bool)
+    eq = np.ones(a.shape[0], bool)
+    for w in range(a.shape[1]):
+        lt |= eq & (a[:, w] < b[:, w])
+        eq &= a[:, w] == b[:, w]
+    return lt, eq
+
+
 def mget_window(
     local_rows: jnp.ndarray,
     row_id: jnp.ndarray,
@@ -501,6 +547,8 @@ class CorpusStore:
         if backend is None:
             backend = InMemoryBackend(corpus, cfg)
         self.backend = backend
+        self.cfg = cfg
+        self.key_words = cfg.key_words
         self.text_mode = backend.text_mode
         self.n = backend.n
         self.stride_bits = backend.stride_bits
@@ -562,6 +610,35 @@ class CorpusStore:
         self.peak_windows = max(self.peak_windows, m)
         return out
 
+    def fetch_keys(self, gidx: np.ndarray, depth) -> Tuple[np.ndarray, np.ndarray]:
+        """Batched packed-key fetch: windows at ``depth`` packed to key words.
+
+        Returns ``(keys, ended)``: keys (m, key_words) int32 order-preserving
+        words (:func:`pack_keys_np`), ended (m,) bool — the window contained a
+        ``0``, i.e. the suffix ends inside it and every deeper window is
+        all-zero.  One batched store round per capacity chunk (the merge-path
+        tile driver's fetch primitive; byte accounting identical to
+        :meth:`fetch_windows`).
+        """
+        win = self.fetch_windows(gidx, depth)
+        return pack_keys_np(win, self.cfg), (win == 0).any(axis=1)
+
+    def rank_windows(self, keys: np.ndarray, gidx: np.ndarray) -> np.ndarray:
+        """Output ranks of candidate rows under (key words..., global index).
+
+        The host reference of the ``kernels/merge_path`` Pallas kernel: rank
+        of a row = number of rows lexicographically smaller, ties broken by
+        the global index (which makes rows strictly unique).  The merge-path
+        driver calls this when ``cfg.use_pallas`` is off; both paths compare
+        the same packed words from :func:`pack_keys_np`.
+        """
+        order = np.lexsort(
+            (gidx,) + tuple(keys[:, w] for w in range(keys.shape[1] - 1, -1, -1))
+        )
+        ranks = np.empty(order.shape[0], np.int64)
+        ranks[order] = np.arange(order.shape[0], dtype=np.int64)
+        return ranks
+
     def mget_window_host(
         self,
         gidx: np.ndarray,
@@ -605,7 +682,7 @@ class CorpusStore:
 
 
 class WindowCursor:
-    """Per-suffix progressive window cache over a :class:`CorpusStore`.
+    """Per-suffix progressive packed-key cache over a :class:`CorpusStore`.
 
     The k-way merge (``repro.core.superblock``) compares *run heads* over and
     over: binary-search partition probes a run member against a splitter, and
@@ -616,20 +693,27 @@ class WindowCursor:
     one depth-0 window per suffix plus deeper windows only down to actual
     tie-breaking depth.
 
+    Windows are cached as **packed key words** (:func:`pack_keys_np` plus an
+    end-of-suffix flag computed from the raw window at fetch time) — the same
+    order-preserving representation the merge-path tile kernel ranks, so the
+    splitter search and the device merge share one compare path, and a cached
+    entry costs ``(key_words + 1) * 4`` bytes instead of ``K * 4``.
+
     Fetches go through the owning store's batched APIs, so all byte/round
     accounting stays in one place; the cursor adds `cached_windows` /
     `peak_cached_windows` and registers its byte footprint with the store's
-    frontier accounting (``CorpusStore.add_frontier``) — cached windows are
+    frontier accounting (``CorpusStore.add_frontier``) — cached keys are
     *owned copies*, so a cursor entry never pins a whole fetch batch or a
-    backend disk chunk in memory.  Windows are released as suffixes are
+    backend disk chunk in memory.  Entries are released as suffixes are
     emitted from the merge (:meth:`release`), or wholesale between merge
     phases (:meth:`release_all`, the streaming build's frontier reset).
     """
 
     def __init__(self, store: CorpusStore):
         self.store = store
-        self._win = {}  # gidx -> [window at depth 0, window at depth 1, ...]
-        self.window_bytes = store.k * 4  # one cached (K,) int32 window
+        self._win = {}  # gidx -> [(key words, ended) at depth 0, 1, ...]
+        # one cached entry: key_words packed lanes + the ended flag lane
+        self.window_bytes = (store.key_words + 1) * 4
         self.cached_windows = 0
         self.peak_cached_windows = 0
 
@@ -639,6 +723,11 @@ class WindowCursor:
             self.peak_cached_windows = max(
                 self.peak_cached_windows, self.cached_windows)
         self.store.add_frontier(delta * self.window_bytes)
+
+    def _pack(self, window: np.ndarray) -> Tuple[np.ndarray, bool]:
+        keys = pack_keys_np(np.array(window, np.int32, copy=True),
+                            self.store.cfg)
+        return keys, bool((np.asarray(window) == 0).any())
 
     def prefetch(self, gidx: np.ndarray) -> None:
         """Batch-fetch depth-0 windows for every uncached suffix in ``gidx``
@@ -650,24 +739,27 @@ class WindowCursor:
         )
         if miss.size == 0:
             return
-        wins = self.store.fetch_windows(miss, 0)
+        keys, ended = self.store.fetch_keys(miss, 0)
         for i, g in enumerate(miss.tolist()):
-            self._win[g] = [wins[i].copy()]
+            self._win[g] = [(keys[i].copy(), bool(ended[i]))]
         self._account(miss.size)
 
-    def window(self, gidx: int, depth: int) -> np.ndarray:
-        """The (K,) window of ``gidx`` at ``depth`` (cached; fetched on miss)."""
+    def key(self, gidx: int, depth: int) -> Tuple[np.ndarray, bool]:
+        """``(key words, ended)`` of ``gidx`` at ``depth`` (cached; fetched
+        on miss)."""
         ws = self._win.get(gidx)
         if ws is None:
             ws = self._win[gidx] = []
         while len(ws) <= depth:
-            ws.append(self.store.fetch_windows(
-                np.array([gidx], np.int64), len(ws))[0])
+            keys, ended = self.store.fetch_keys(
+                np.array([gidx], np.int64), len(ws))
+            ws.append((keys[0], bool(ended[0])))
             self._account(1)
         return ws[depth]
 
     def offer(self, gidx: int, depth: int, window: np.ndarray) -> None:
-        """Warm the cache with an externally fetched window (no store round).
+        """Warm the cache with an externally fetched raw window (no store
+        round; packed on the way in).
 
         Used by the host re-rank (``_refine_sort``) so windows it already
         paid for are re-served to the k-way merge instead of re-fetched.
@@ -678,21 +770,21 @@ class WindowCursor:
         if ws is None:
             if depth != 0:
                 return
-            self._win[gidx] = [np.array(window, np.int32, copy=True)]
+            self._win[gidx] = [self._pack(window)]
         elif len(ws) == depth:
-            ws.append(np.array(window, np.int32, copy=True))
+            ws.append(self._pack(window))
         else:
             return
         self._account(1)
 
     def release(self, gidx: int) -> None:
-        """Drop a suffix's cached windows (call when the merge emits it)."""
+        """Drop a suffix's cached keys (call when the merge emits it)."""
         ws = self._win.pop(gidx, None)
         if ws is not None:
             self._account(-len(ws))
 
     def release_all(self) -> None:
-        """Drop every cached window (streaming merge's inter-phase reset:
+        """Drop every cached entry (streaming merge's inter-phase reset:
         residency is reclaimed at the price of re-fetching on next probe)."""
         total = self.cached_windows
         self._win.clear()
@@ -702,19 +794,19 @@ class WindowCursor:
     def less(self, a: int, b: int) -> bool:
         """Exact ``suffix(a) < suffix(b)``; equal contents tie by index.
 
-        Progressive K-token comparison against cached windows.  Equal windows
-        containing a ``0`` mean both suffixes ended at the same depth with
-        identical content — the global index breaks the tie (the oracle's
-        ``(suffix tokens..., index)`` order).
+        Progressive packed-key comparison against cached entries (word order
+        equals token-window order).  Equal windows whose suffixes end inside
+        them mean identical content — the global index breaks the tie (the
+        oracle's ``(suffix tokens..., index)`` order).
         """
         if a == b:
             return False
         for d in range(self.store.max_window_depth):
-            wa, wb = self.window(a, d), self.window(b, d)
-            neq = wa != wb
-            if neq.any():
-                j = int(np.argmax(neq))
-                return bool(wa[j] < wb[j])
-            if (wa == 0).any():
+            wa, ended = self.key(a, d)
+            wb, _ = self.key(b, d)
+            lt, eq = lex_less_rows(wa[None, :], wb[None, :])
+            if not eq[0]:
+                return bool(lt[0])
+            if ended:
                 return a < b
         raise RuntimeError("suffix comparison overran the window bound")

@@ -19,25 +19,32 @@ Phases (see :func:`build_suffix_array_superblock`):
    against the resident corpus rather than trusting block order blindly.
 3. **Boundary-exact merge via the store** — the block SAs are treated as
    what they are: already-sorted runs (exactly sorted in reads mode, exactly
-   sorted away from block tails in text mode).  Splitter suffixes sampled at
-   per-block quantiles are ranked exactly, then each splitter's rank inside
-   every run is located by **binary search** with O(log n) exact store
-   comparisons (:func:`repro.core.store.WindowCursor` caches each probed
-   window).  The resulting per-run segments of a bucket are **k-way merged**
-   at run heads, fetching comparison windows only to tie-breaking depth —
-   *indexes move, tokens stay put*, and no suffix is wholesale re-ranked.
-   Text mode first splits off the block-tail *risk set* (suffixes whose
-   block-local comparisons could have run past the block boundary) and
-   re-ranks only those; the rest ride the k-way path.  Oversized buckets are
-   split recursively (splitters are member suffixes, so every split makes
-   progress), guaranteeing that no bucket — and therefore no run —
-   materializes more than one superblock of records.
+   sorted away from block tails in text mode).  The default
+   ``merge_algorithm = "merge_path"`` merges them by **batched merge-path
+   tiles** (:func:`_merge_path_runs`): per tile, every run's next heads are
+   fetched in one batched store call and packed into order-preserving key
+   words, tie groups deeper than the fetched window are escalated together
+   (one batched fetch per extra depth, or a single
+   :class:`repro.core.pipeline.DeviceRefiner` call on the device backend),
+   and every candidate's output rank is computed at once — the merge-path
+   diagonal ranking (``kernels/merge_path`` Pallas kernel under
+   ``cfg.use_pallas``, its numpy reference otherwise).  No host loop touches
+   individual suffixes: *indexes move, tokens stay put*, and store
+   round-trips collapse by the tile width (>= 5x fewer than the heap walk,
+   asserted in tests and ``benchmarks.run merge``).  Text mode first splits
+   off the block-tail *risk set* (suffixes whose block-local comparisons
+   could have run past the block boundary) and re-ranks only those; the
+   re-ranked pieces join the tile merge as runs of their own.
 
-   ``SuperblockConfig.merge_algorithm = "rerank"`` keeps the previous
-   wholesale re-ranking merge as the traffic baseline, and
-   ``merge_backend = "device"`` runs bucket refinement TPU-resident via
-   :class:`repro.core.pipeline.DeviceRefiner` (windows served by
-   ``mget_window`` under the same ``shard_map`` reducer as the pipeline).
+   ``merge_algorithm = "kway"`` keeps the PR-2 path — splitter ranks located
+   inside each run by O(log n) binary-search store comparisons
+   (:class:`repro.core.store.WindowCursor` caches each probed window as the
+   same packed key words), buckets k-way merged through a host heap — as the
+   round-trip baseline; ``"rerank"`` keeps the PR-1 wholesale re-ranking
+   merge as the traffic baseline; ``merge_backend = "device"`` runs
+   re-rank/risk/tie-group refinement TPU-resident via ``DeviceRefiner``
+   (windows served by ``mget_window`` under the same ``shard_map`` reducer
+   as the pipeline).
 
 The peak number of records any single run held is reported in
 ``Footprint.peak_records`` and is bounded by ``plan.capacity_records`` — the
@@ -50,6 +57,7 @@ import math
 import os
 import shutil
 import tempfile
+import uuid
 import warnings
 from dataclasses import dataclass
 from typing import Callable, List, Optional, Tuple
@@ -66,7 +74,7 @@ from repro.core.store import (
     StoreBackend,
     WindowCursor,
 )
-from repro.core.types import Footprint, SAResult
+from repro.core.types import WORD_BITS, WORD_MOD, Footprint, SAResult
 
 
 @dataclass(frozen=True)
@@ -265,6 +273,14 @@ class _MergeFrontier:
 
     def per_run(self, num_runs: int) -> int:
         return max(2, self.readahead_bytes // (max(1, num_runs) * self.window_bytes))
+
+    def per_run_keys(self, num_runs: int, key_words: int) -> int:
+        """Merge-path tile width under the same read-ahead budget: tile
+        buffers hold *packed* key rows, so the per-element estimate is two
+        levels of key words plus the flag lanes (deep-tie escalation can
+        widen rows further; the budget's slack share absorbs it)."""
+        est = 2 * (key_words + 1) * 4
+        return max(2, self.readahead_bytes // (max(1, num_runs) * est))
 
 
 # ---------------------------------------------------------------------------
@@ -631,6 +647,316 @@ def _merge_runs(
     return out
 
 
+# ---------------------------------------------------------------------------
+# merge-path: batched, device-resident k-way merge (no host heap walk)
+# ---------------------------------------------------------------------------
+
+
+class _OutputSink:
+    """Final-order SA emitter.
+
+    Merge pieces arrive in true suffix order, so the output can be written
+    sequentially instead of concatenated at the end: into a preallocated host
+    array by default, or — when ``SuperblockConfig.spill_dir`` is set — into
+    a disk-backed ``.npy`` memmap, dropping the last O(n) host allocation
+    (the returned ``SAResult.suffix_array`` is then the memmap itself).
+    """
+
+    def __init__(self, total: int, memmap_path: Optional[str] = None):
+        self.total = int(total)
+        self.written = 0
+        self.pieces = 0
+        self.max_piece = 0
+        self.path = memmap_path
+        if memmap_path is not None:
+            # write under a unique temp name and atomically rename on
+            # completion: reusing a spill_dir must never truncate the inode
+            # a previous build's returned memmap is still mapping — and two
+            # concurrent builds sharing a spill_dir must not share a tmp.
+            self._tmp = f"{memmap_path}.{os.getpid()}.{uuid.uuid4().hex}.tmp"
+            self._out = np.lib.format.open_memmap(
+                self._tmp, mode="w+", dtype=np.int64, shape=(self.total,))
+        else:
+            self._out = np.empty(self.total, np.int64)
+
+    def append(self, piece: np.ndarray) -> None:
+        m = int(piece.shape[0])
+        if m == 0:
+            return
+        self._out[self.written : self.written + m] = piece
+        self.written += m
+        self.pieces += 1
+        self.max_piece = max(self.max_piece, m)
+
+    def result(self) -> np.ndarray:
+        assert self.written == self.total, (self.written, self.total)
+        if self.path is not None:
+            self._out.flush()
+            del self._out  # drop the write mapping before the rename
+            os.replace(self._tmp, self.path)
+            self._out = np.load(self.path, mmap_mode="r+")
+        return self._out
+
+
+class _RunTile:
+    """One sorted run's buffered frontier for the merge-path tile merge.
+
+    Holds up to ``tile`` unconsumed run members with their packed key words
+    (``levels * key_words`` columns; deeper levels are appended by the tie
+    escalation and persist until the member is emitted, so every (suffix,
+    depth) window is fetched once), per-member fetched-level counts and
+    end-of-suffix flags.  Columns past a member's fetched level are zeros —
+    exactly the zero-padding a finished suffix really continues with, and
+    never consulted for an unfinished one (the escalation fetches a level
+    for every group member before comparing it).
+    """
+
+    __slots__ = ("run", "pos", "count", "words", "levels", "ended", "kw")
+
+    def __init__(self, run: np.ndarray, kw: int):
+        self.run = run
+        self.kw = kw
+        self.pos = 0  # consumed members
+        self.count = 0  # buffered members
+        self.words = np.zeros((0, kw), np.int32)
+        self.levels = np.zeros((0,), np.int32)  # fetched levels per member
+        self.ended = np.zeros((0,), bool)
+
+    @property
+    def remaining(self) -> int:
+        return int(self.run.size) - self.pos
+
+    @property
+    def buffered(self) -> int:
+        return self.count
+
+    @property
+    def gidx(self) -> np.ndarray:
+        """Buffered members' global indexes — a transient view into the
+        (possibly disk-spilled) run itself, not a resident copy."""
+        return np.asarray(self.run[self.pos : self.pos + self.count], np.int64)
+
+    def need(self, tile: int) -> np.ndarray:
+        """Run members to fetch so the buffer covers min(tile, remaining)."""
+        want = min(tile, self.remaining) - self.count
+        if want <= 0:
+            return np.zeros((0,), np.int64)
+        lo = self.pos + self.count
+        return np.asarray(self.run[lo : lo + want], np.int64)
+
+    def extend(self, keys: np.ndarray, ended: np.ndarray) -> None:
+        m = keys.shape[0]
+        if m == 0:
+            return
+        width = self.words.shape[1]
+        rows = np.zeros((m, width), np.int32)
+        rows[:, : self.kw] = keys
+        self.count += m
+        self.words = np.concatenate([self.words, rows])
+        self.levels = np.concatenate([self.levels, np.ones(m, np.int32)])
+        self.ended = np.concatenate([self.ended, np.asarray(ended, bool)])
+
+    def widen(self, levels: int) -> None:
+        """Grow the word matrix to ``levels * key_words`` columns (zeros)."""
+        width = levels * self.kw
+        if self.words.shape[1] >= width:
+            return
+        grown = np.zeros((self.words.shape[0], width), np.int32)
+        grown[:, : self.words.shape[1]] = self.words
+        self.words = grown
+
+    def consume(self, count: int) -> None:
+        self.pos += count
+        self.count -= count
+        self.words = self.words[count:]
+        self.levels = self.levels[count:]
+        self.ended = self.ended[count:]
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.words.nbytes + self.levels.nbytes + self.ended.nbytes)
+
+
+def _group_ids(prev: Optional[np.ndarray], cols: np.ndarray) -> np.ndarray:
+    """Equality-group ids of rows under (previous group, cols...)."""
+    keys = tuple(cols[:, w] for w in range(cols.shape[1] - 1, -1, -1))
+    if prev is not None:
+        keys = keys + (prev,)
+    order = np.lexsort(keys)
+    stacked = cols[order]
+    new = np.ones(order.shape[0], bool)
+    if order.shape[0] > 1:
+        same = (stacked[1:] == stacked[:-1]).all(axis=1)
+        if prev is not None:
+            same &= prev[order][1:] == prev[order][:-1]
+        new[1:] = ~same
+    gid = np.empty(order.shape[0], np.int64)
+    gid[order] = np.cumsum(new) - 1
+    return gid
+
+
+def _merge_path_runs(
+    store: CorpusStore,
+    runs: List[np.ndarray],
+    sink: _OutputSink,
+    cap: int,
+    merge_tile: int,
+    use_pallas: bool,
+    refiner: Optional[DeviceRefiner] = None,
+    frontier: Optional[_MergeFrontier] = None,
+) -> int:
+    """Merge exactly-sorted runs by merge-path tiles; emit in final order.
+
+    The heap walk's per-suffix cursor pokes are replaced by batched tile
+    rounds: per tile, the next ``tile`` members of every run are fetched in
+    **one** batched store call and packed to key words; groups of candidates
+    whose fetched words tie are escalated together — one batched fetch per
+    extra window depth (or one :class:`DeviceRefiner` call resolving every
+    group at once) instead of one store round per comparison; then every
+    candidate's output rank is computed in one shot (``kernels/merge_path``
+    Pallas kernel when ``cfg.use_pallas``, else the numpy reference
+    ``CorpusStore.rank_windows`` — same packed-word compare either way).
+    All candidates ranked below every partially-buffered run's last buffered
+    member are emitted at once (the merge-path safety horizon), so a tile
+    usually drains far more than ``tile`` suffixes per round trip.
+
+    Returns the peak candidate count (the merge's record footprint).
+    """
+    runs = [np.asarray(r) for r in runs if r.size]
+    if not runs:
+        return 0
+    if len(runs) == 1:
+        sink.append(np.asarray(runs[0], np.int64))
+        return int(runs[0].size)
+    kw = store.key_words
+    if merge_tile > 0:  # explicit knob wins, streaming or not
+        tile = merge_tile
+    elif frontier is not None:
+        tile = frontier.per_run_keys(len(runs), kw)
+    else:
+        tile = 4096
+    tile = max(2, min(tile, cap // max(1, len(runs))))
+    tiles = [_RunTile(r, kw) for r in runs]
+    registered = 0  # frontier bytes currently registered with the store
+    peak_candidates = 0
+    max_levels = store.max_window_depth
+
+    def _account() -> int:
+        nonlocal registered
+        cur = sum(t.nbytes for t in tiles)
+        store.add_frontier(cur - registered)
+        registered = cur
+        return cur
+
+    while any(t.buffered or t.remaining for t in tiles):
+        # ---- refill: one batched store round for every run's new heads ----
+        needs = [t.need(tile) for t in tiles]
+        flat = np.concatenate(needs)
+        if flat.size:
+            keys, ended = store.fetch_keys(flat, 0)
+            off = 0
+            for t, n in zip(tiles, needs, strict=True):
+                t.extend(keys[off : off + n.size], ended[off : off + n.size])
+                off += n.size
+            _account()  # register the refill before escalation fetches, so
+            # LRU-loading rounds see the full frontier in peak_resident
+        live = [t for t in tiles if t.buffered]
+        cand_gidx = np.concatenate([t.gidx for t in live])
+        c = cand_gidx.shape[0]
+        peak_candidates = max(peak_candidates, c)
+
+        # ---- escalate ties: whole groups per round, batched fetches -------
+        level = 1
+        width = max(t.words.shape[1] for t in live) // kw
+        g = None
+        tie_col = None
+        while True:
+            for t in live:
+                t.widen(max(level, width))
+            cand_words = np.concatenate([t.words for t in live])
+            cand_levels = np.concatenate([t.levels for t in live])
+            cand_ended = np.concatenate([t.ended for t in live])
+            lo = (level - 1) * kw
+            g = _group_ids(g, cand_words[:, lo : lo + kw])
+            sizes = np.bincount(g)
+            open_grp = np.zeros(sizes.shape[0], bool)
+            np.logical_or.at(open_grp, g, ~cand_ended)
+            amb = (sizes[g] >= 2) & open_grp[g]
+            if not amb.any():
+                break
+            if refiner is not None:
+                # one device refinement resolves every tie group at once:
+                # a member's position in the refined order is decisive
+                # within its group and never consulted across groups.
+                members = np.flatnonzero(amb)
+                order = refiner.refine(cand_gidx[members])
+                # vectorized rank lookup: member i's tie word = its position
+                # in the refined order (no per-suffix host loop)
+                so = np.argsort(order)
+                tie_col = np.zeros(c, np.int32)
+                tie_col[members] = so[
+                    np.searchsorted(order[so], cand_gidx[members])
+                ].astype(np.int32)
+                break
+            if level >= max_levels:
+                raise RuntimeError("merge-path escalation overran the "
+                                   "window bound")
+            # fetch the next window level for unfinished members of open
+            # groups (finished members' deeper words are genuine zeros)
+            fetch = np.flatnonzero(amb & ~cand_ended & (cand_levels <= level))
+            if fetch.size:
+                keys, ended = store.fetch_keys(cand_gidx[fetch], level)
+                bounds = np.cumsum([0] + [t.buffered for t in live])
+                t_of = np.searchsorted(bounds, fetch, side="right") - 1
+                for ti, t in enumerate(live):
+                    sel = fetch[t_of == ti]
+                    if not sel.size:
+                        continue
+                    local = sel - bounds[ti]
+                    t.widen(level + 1)
+                    t.words[local, level * kw : (level + 1) * kw] = (
+                        keys[t_of == ti])
+                    t.levels[local] = level + 1
+                    t.ended[local] |= ended[t_of == ti]
+            level += 1
+        _account()
+
+        # ---- rank the tile: merge-path diagonal ranks in one shot ---------
+        cand_words = np.concatenate([t.words for t in live])
+        if tie_col is not None:
+            cand_words = np.concatenate([cand_words, tie_col[:, None]], axis=1)
+        if use_pallas:
+            import jax.numpy as jnp
+
+            from repro.kernels import ops as kops
+
+            idx_hi = (cand_gidx >> WORD_BITS).astype(np.int32)
+            idx_lo = (cand_gidx & (WORD_MOD - 1)).astype(np.int32)
+            keys_full = np.concatenate(
+                [cand_words, idx_hi[:, None], idx_lo[:, None]], axis=1)
+            ranks = np.asarray(
+                kops.merge_path_ranks(jnp.asarray(keys_full))
+            ).astype(np.int64)
+        else:
+            ranks = store.rank_windows(cand_words, cand_gidx)
+
+        # ---- emit everything below the safety horizon ---------------------
+        bounds = np.cumsum([0] + [t.buffered for t in live])
+        emit_cnt = c
+        for ti, t in enumerate(live):
+            if t.remaining > t.buffered:  # partially buffered run
+                emit_cnt = min(emit_cnt, int(ranks[bounds[ti + 1] - 1]) + 1)
+        emitted = np.empty(emit_cnt, np.int64)
+        take = ranks < emit_cnt
+        emitted[ranks[take]] = cand_gidx[take]
+        sink.append(emitted)
+        for ti, t in enumerate(live):
+            t.consume(int(np.count_nonzero(take[bounds[ti] : bounds[ti + 1]])))
+        _account()
+    store.add_frontier(-registered)
+    return peak_candidates
+
+
 def _split_boundary_risk(
     plan: SuperblockPlan,
     local_sas: List[np.ndarray],
@@ -736,7 +1062,7 @@ def _build_superblock(
         )
     if sb.merge_backend not in ("host", "device"):
         raise ValueError(f"unknown merge_backend: {sb.merge_backend!r}")
-    if sb.merge_algorithm not in ("kway", "rerank"):
+    if sb.merge_algorithm not in ("merge_path", "kway", "rerank"):
         raise ValueError(f"unknown merge_algorithm: {sb.merge_algorithm!r}")
     streaming = not isinstance(backend, InMemoryBackend)
     if streaming and sb.merge_backend == "device":
@@ -811,6 +1137,11 @@ def _build_superblock(
     ))
     cap = plan.capacity_records
     pre_requests = store.requests
+    total_suffixes = int(sum(r.size for r in local_sas))
+    out_path = (os.path.join(sb.spill_dir, "suffix_array.npy")
+                if sb.spill_dir is not None else None)
+    sink = _OutputSink(total_suffixes, memmap_path=out_path)
+    peak_candidates = 0
 
     cur = WindowCursor(store)
     refiner: Optional[DeviceRefiner] = None
@@ -831,11 +1162,63 @@ def _build_superblock(
 
         def refine(g: np.ndarray) -> np.ndarray:
             return _refine_sort(store, g, cursor=warm)
+
+    def _risk_free_runs() -> Tuple[List[np.ndarray], List[np.ndarray]]:
+        """The exactly-sorted runs of the merge, as ``(runs, risk_pieces)``:
+        block SAs with text-mode boundary-risk suffixes (and unproven blocks)
+        re-ranked into extra sorted pieces that join the merge as runs of
+        their own.  ``runs`` empty means every suffix was at risk — the
+        re-ranked pieces are then consecutive intervals of the true order
+        and need no merge at all."""
+        if plan.text_mode:
+            runs, risk = _split_boundary_risk(
+                plan, local_sas, block_stats, store.k
+            )
+            runs = [keep_run(r) for r in runs]  # re-spill the filtered runs
+            risk_pieces: List[np.ndarray] = []
+            if risk.size:
+                risk_pieces = [
+                    keep_run(p)
+                    for p in _sorted_runs(store, risk, cap, samples, refine)
+                    if p.size
+                ]
+            return runs, risk_pieces
+        # reads mode: block runs are exact as-is (suffixes never cross a
+        # read) — unless a block hit the refinement hard cap, in which
+        # case its order is unproven and it is re-ranked like a risk set.
+        runs, bad = [], []
+        for sa_b, st in zip(local_sas, block_stats, strict=True):
+            (runs if st.get("unresolved", 0) == 0 else bad).append(sa_b)
+        pieces = []
+        if bad:
+            pieces = [
+                keep_run(p) for p in _sorted_runs(
+                    store, np.concatenate(bad), cap, samples, refine)
+                if p.size
+            ]
+        return runs, pieces
+
     if sb.merge_algorithm == "rerank":
         # PR-1 baseline: every bucket re-ranked from scratch (block order is
         # only used for splitter sampling).  Kept as the traffic reference.
-        pieces = _sorted_runs(store, np.concatenate(local_sas), cap, samples,
-                              refine)
+        for p in _sorted_runs(store, np.concatenate(local_sas), cap, samples,
+                              refine):
+            sink.append(p)
+    elif sb.merge_algorithm == "merge_path":
+        # tentpole path: no splitter partition, no heap — the runs are
+        # merged directly by batched merge-path tiles (text-mode risk sets
+        # are re-ranked first exactly as in the k-way path).
+        runs, risk_pieces = _risk_free_runs()
+        if runs:
+            peak_candidates = _merge_path_runs(
+                store, runs + risk_pieces, sink, cap, sb.merge_tile,
+                cfg.use_pallas, refiner=refiner, frontier=frontier,
+            )
+        else:
+            # every suffix was at risk: the re-ranked pieces already are
+            # consecutive intervals of the true order — no merge needed.
+            for p in risk_pieces:
+                sink.append(p)
     else:
         # Splitter pools are lists of already-sorted pick runs: cursor-merge
         # them so their windows are fetched once and stay hot for the
@@ -845,45 +1228,15 @@ def _build_superblock(
         def rank_pool(pool_runs: List[np.ndarray]) -> np.ndarray:
             return _kway_merge(cur, pool_runs, release=False)
 
-        if plan.text_mode:
-            runs, risk = _split_boundary_risk(
-                plan, local_sas, block_stats, store.k
-            )
-            runs = [keep_run(r) for r in runs]  # re-spill the filtered runs
-            risk_pieces: List[np.ndarray] = []
-            if risk.size:
-                # the risk set is re-ranked into <= cap sorted pieces; each
-                # piece then joins the k-way merge as one more run.
-                risk_pieces = [
-                    keep_run(p)
-                    for p in _sorted_runs(store, risk, cap, samples, refine)
-                    if p.size
-                ]
-            if runs:
-                pieces = _merge_runs(
-                    cur, runs + risk_pieces, cap, samples, rank_pool,
-                    frontier=frontier,
-                )
-            else:
-                # every suffix was at risk: the re-ranked pieces already are
-                # consecutive intervals of the true order — no merge needed.
-                pieces = risk_pieces
+        runs, risk_pieces = _risk_free_runs()
+        if runs:
+            for p in _merge_runs(cur, runs + risk_pieces, cap, samples,
+                                 rank_pool, frontier=frontier):
+                sink.append(p)
         else:
-            # reads mode: block runs are exact as-is (suffixes never cross a
-            # read) — unless a block hit the refinement hard cap, in which
-            # case its order is unproven and it is re-ranked like a risk set.
-            runs, bad = [], []
-            for sa_b, st in zip(local_sas, block_stats, strict=True):
-                (runs if st.get("unresolved", 0) == 0 else bad).append(sa_b)
-            if bad:
-                runs = runs + [
-                    keep_run(p) for p in _sorted_runs(
-                        store, np.concatenate(bad), cap, samples, refine)
-                    if p.size
-                ]
-            pieces = _merge_runs(cur, runs, cap, samples, rank_pool,
-                                 frontier=frontier)
-    sa = np.concatenate(pieces) if pieces else np.zeros((0,), np.int64)
+            for p in risk_pieces:
+                sink.append(p)
+    sa = sink.result()
 
     dev_req = refiner.requests if refiner else 0
     dev_req_bytes = refiner.request_bytes if refiner else 0
@@ -893,7 +1246,7 @@ def _build_superblock(
     fp.output = int(sa.shape[0]) * 8
     fp.peak_records = max(fp.peak_records, store.peak_windows,
                           refiner.peak_records if refiner else 0,
-                          max((p.size for p in pieces), default=0))
+                          peak_candidates, sink.max_piece)
     fp.materialized = fp.peak_records * 16
     fp.peak_resident_bytes = store.peak_resident_bytes
 
@@ -905,8 +1258,8 @@ def _build_superblock(
         "peak_records": fp.peak_records,
         "merge_algorithm": sb.merge_algorithm,
         "merge_backend": sb.merge_backend,
-        "merge_pieces": len(pieces),
-        "max_piece": int(max((p.size for p in pieces), default=0)),
+        "merge_pieces": sink.pieces,
+        "max_piece": int(sink.max_piece),
         "merge_fetch_requests": int(store.requests - pre_requests) + dev_req,
         # store + device-refiner counters are merge-only (neither serves any
         # phase-2 fetch)

@@ -5,6 +5,7 @@ from repro.data.chunk_store import (
     default_chunk_items,
     read_chunked_corpus_meta,
     write_chunked_corpus,
+    write_chunked_stream,
 )
 from repro.data.corpus import synth_dna_reads, synth_token_corpus
 from repro.data.dedup import dedup_corpus, find_duplicate_spans
@@ -22,4 +23,5 @@ __all__ = [
     "default_chunk_items",
     "read_chunked_corpus_meta",
     "write_chunked_corpus",
+    "write_chunked_stream",
 ]

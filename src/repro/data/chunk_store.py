@@ -111,6 +111,65 @@ def write_chunked_corpus(corpus, path: str, chunk_items: int = 0) -> ChunkedCorp
     return meta
 
 
+def write_chunked_stream(batches, path: str,
+                         chunk_items: int = 0) -> ChunkedCorpusMeta:
+    """Serialize a corpus arriving as an *iterable of item batches* — the
+    >RAM writer: at no point is more than one batch plus one partial-chunk
+    carry buffer resident.
+
+    ``batches`` yields (b,) int32 token arrays (text mode) or (b, L) int32
+    row arrays (reads mode); geometry comes from the first batch and every
+    later batch must match it.  The total item count is unknown up front, so
+    a placeholder header is written first and back-patched once the stream
+    is drained (the header lives at a fixed offset).  ``chunk_items`` 0
+    derives ~1 MiB chunks (the item count is unknown, so the
+    at-least-8-chunks clause of :func:`default_chunk_items` cannot apply).
+
+    Returns the final :class:`ChunkedCorpusMeta`; an empty iterable is an
+    error (a corpus file must carry its geometry).
+    """
+    it = iter(batches)
+    try:
+        first = np.asarray(next(it), np.int32)
+    except StopIteration:
+        raise ValueError("write_chunked_stream: empty batch iterable "
+                         "(geometry is derived from the first batch)") from None
+    text_mode = first.ndim == 1
+    row_len = 1 if text_mode else first.shape[1]
+    if chunk_items <= 0:
+        chunk_items = max(1, (1 << 20) // max(1, row_len * 4))
+    items = 0
+    try:
+        with open(path, "wb") as f:
+            f.write(_HEADER.pack(MAGIC, _VERSION, int(text_mode),
+                                 0, row_len, chunk_items))  # back-patched
+            batch = first
+            while batch is not None:
+                batch = np.asarray(batch, np.int32)
+                if (batch.ndim != first.ndim
+                        or (not text_mode and batch.shape[1] != row_len)):
+                    raise ValueError(
+                        f"write_chunked_stream: batch shape {batch.shape} "
+                        f"does not match the first batch's geometry "
+                        f"({'text' if text_mode else f'rows of {row_len}'})")
+                f.write(np.ascontiguousarray(batch, "<i4").tobytes())
+                items += batch.shape[0]
+                batch = next(it, None)
+            f.seek(0)
+            f.write(_HEADER.pack(MAGIC, _VERSION, int(text_mode),
+                                 items, row_len, chunk_items))
+    except BaseException:
+        # never leave a valid-looking file with the placeholder items=0
+        # header: a later reader would silently see an empty corpus.
+        try:
+            os.unlink(path)
+        except OSError:
+            pass
+        raise
+    return ChunkedCorpusMeta(text_mode=text_mode, items=items,
+                             row_len=row_len, chunk_items=chunk_items)
+
+
 def read_chunked_corpus_meta(path: str) -> ChunkedCorpusMeta:
     with open(path, "rb") as f:
         raw = f.read(HEADER_BYTES)

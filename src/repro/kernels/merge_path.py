@@ -1,0 +1,76 @@
+"""Pallas kernel: merge-path ranking of sorted-run key tiles (device k-way
+merge, the out-of-core merge's bucket engine).
+
+Given one tile of merge candidates — the buffered frontiers of k sorted runs,
+each candidate a row of order-preserving packed key words (window words from
+``prefix_pack`` packing + the two int31 global-index words as the final
+tiebreak) — compute every candidate's **output rank** in the merged order.
+
+This is the classic GPU merge-path formulation turned inside out: merge-path
+binary-searches each output diagonal for its (run, offset) crossing; since the
+tiebreak words make rows strictly unique, the crossing of element ``e``'s
+diagonal is exactly the number of candidates with a smaller key, so
+
+    rank(e) = #{c : key(c) < key(e)}
+
+and the interleaved output permutation is ``out[rank(e)] = e``.  Every rank is
+independent — zero sequential dependence, pure VPU compare/accumulate work (no
+MXU, no dynamic addressing), which is why this replaces the host heap walk.
+
+Grid: one step per block of B candidate rows; the full key tile stays resident
+in VMEM (C x W int32 — a merge tile is a few thousand rows of a handful of
+words, well under VMEM).  Padding rows carry ``jnp.iinfo(int32).max`` in every
+word: they sort after all real keys (real words are int31, index words int31)
+and their ranks land past ``n`` where the caller discards them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.compat import out_struct, vma_of as _vma
+
+
+def _kernel(blk_ref, all_ref, out_ref, *, words):
+    blk = blk_ref[...]  # (B, W) this block's candidate keys
+    full = all_ref[...]  # (C, W) every candidate key in the tile
+    b = blk.shape[0]
+    lt = jnp.zeros((b, full.shape[0]), jnp.bool_)
+    eq = jnp.ones((b, full.shape[0]), jnp.bool_)
+    for w in range(words):  # static: W is a handful of words
+        a = blk[:, w][:, None]
+        c = full[:, w][None, :]
+        lt = lt | (eq & (c < a))
+        eq = eq & (c == a)
+    out_ref[...] = jnp.sum(lt.astype(jnp.int32), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def merge_path_ranks(keys: jnp.ndarray, block: int = 256,
+                     interpret: bool = True) -> jnp.ndarray:
+    """keys (C, W) int32 rows, strictly unique -> (C,) int32 output ranks.
+
+    Rows must be strictly ordered by lexicographic word compare (the caller
+    appends the packed global-index words, which are unique); the result is
+    a permutation of ``0..C-1``.
+    """
+    n, w = keys.shape
+    nblocks = -(-n // block)
+    pad = nblocks * block - n
+    big = jnp.iinfo(jnp.int32).max
+    padded = jnp.pad(keys, ((0, pad), (0, 0)), constant_values=big)
+    ranks = pl.pallas_call(
+        functools.partial(_kernel, words=w),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((block, w), lambda i: (i, 0)),
+            pl.BlockSpec((nblocks * block, w), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=out_struct((nblocks * block,), jnp.int32, vma=_vma(keys)),
+        interpret=interpret,
+    )(padded, padded)
+    return ranks[:n]

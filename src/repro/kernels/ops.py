@@ -10,6 +10,7 @@ import jax
 
 from repro.kernels.bitonic_sort import bitonic_sort_tiles as _bitonic
 from repro.kernels.bucket_hist import bucket_hist as _bucket_hist
+from repro.kernels.merge_path import merge_path_ranks as _merge_path_ranks
 from repro.kernels.prefix_pack import prefix_pack as _prefix_pack
 from repro.kernels.window_gather import window_gather as _window_gather
 
@@ -34,3 +35,7 @@ def bucket_hist(key_hi, key_lo, split_hi, split_lo, block: int = 1024):
 
 def bitonic_sort_tiles(key_hi, key_lo, val, tile: int = 1024):
     return _bitonic(key_hi, key_lo, val, tile=tile, interpret=_interpret())
+
+
+def merge_path_ranks(keys, block: int = 256):
+    return _merge_path_ranks(keys, block=block, interpret=_interpret())

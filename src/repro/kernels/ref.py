@@ -29,6 +29,23 @@ def bucket_hist_ref(key_hi, key_lo, split_hi, split_lo):
     return bucket, hist
 
 
+def merge_path_ranks_ref(keys: jnp.ndarray) -> jnp.ndarray:
+    """keys (C, W) int32 unique rows -> (C,) output ranks (merge-path oracle).
+
+    rank(e) = number of rows lexicographically smaller than row e; with
+    strictly-unique rows (the index tiebreak words) this is the interleaved
+    output permutation of the k-way merge.
+    """
+    lt = jnp.zeros((keys.shape[0], keys.shape[0]), jnp.bool_)
+    eq = jnp.ones((keys.shape[0], keys.shape[0]), jnp.bool_)
+    for w in range(keys.shape[1]):
+        a = keys[:, w][:, None]
+        c = keys[:, w][None, :]
+        lt = lt | (eq & (c < a))
+        eq = eq & (c == a)
+    return jnp.sum(lt.astype(jnp.int32), axis=1)
+
+
 def bitonic_sort_tiles_ref(key_hi, key_lo, val, tile: int):
     import jax
 

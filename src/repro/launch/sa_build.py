@@ -51,10 +51,15 @@ def main():
     ap.add_argument("--merge-backend", choices=["host", "device"],
                     default="host",
                     help="where out-of-core merge buckets are refined")
-    ap.add_argument("--merge-algorithm", choices=["kway", "rerank"],
-                    default="kway",
-                    help="out-of-core merge: boundary-exact k-way (default) "
-                         "or the wholesale re-rank baseline")
+    ap.add_argument("--merge-algorithm",
+                    choices=["merge_path", "kway", "rerank"],
+                    default="merge_path",
+                    help="out-of-core merge: batched merge-path tiles "
+                         "(default), the heap-walk k-way baseline, or the "
+                         "wholesale re-rank baseline")
+    ap.add_argument("--merge-tile", type=int, default=0,
+                    help="merge-path tile width (buffered heads per run; "
+                         "0 = derive from the per-run record capacity)")
     ap.add_argument("--store-backend", choices=["memory", "chunked"],
                     default="memory",
                     help="out-of-core merge store: host-resident corpus "
@@ -78,7 +83,7 @@ def main():
     from repro.core.store import DEFAULT_CACHE_BUDGET
     from repro.core.superblock import build_suffix_array_auto, plan_superblocks
     from repro.core.terasort import build_suffix_array_terasort
-    from repro.data.chunk_store import chunk_items_for_budget, write_chunked_corpus
+    from repro.data.chunk_store import chunk_items_for_budget, write_chunked_stream
     from repro.data.corpus import (
         flatten_reads_with_separators,
         synth_dna_reads,
@@ -102,6 +107,7 @@ def main():
         max_records_per_run=args.max_records_per_run,
         merge_backend=args.merge_backend,
         merge_algorithm=args.merge_algorithm,
+        merge_tile=args.merge_tile,
         store_backend=store_backend,
         chunk_records=args.chunk_records,
         cache_budget_bytes=args.cache_budget,
@@ -118,7 +124,12 @@ def main():
                       else DEFAULT_CACHE_BUDGET)
             chunk_items = args.chunk_records or chunk_items_for_budget(
                 items, row_len, budget)
-            meta = write_chunked_corpus(corpus, args.corpus_file,
+            # generator-fed streaming writer: serialization holds one batch
+            # at a time, so a synthesis source larger than RAM could feed
+            # the same path batch by batch
+            batches = (corpus[lo : lo + chunk_items]
+                       for lo in range(0, items, chunk_items))
+            meta = write_chunked_stream(batches, args.corpus_file,
                                         chunk_items=chunk_items)
             print(f"wrote {args.corpus_file}: {meta.items} items x "
                   f"{meta.row_len}, {meta.num_chunks} chunks of "

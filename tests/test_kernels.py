@@ -72,6 +72,25 @@ def test_bitonic_sort_tiles(n, tile):
     np.testing.assert_array_equal(gk[order], wk[order_w])
 
 
+@pytest.mark.parametrize("n,w,block", [(5, 2, 8), (100, 4, 32),
+                                       (700, 3, 256), (256, 6, 128)])
+def test_merge_path_ranks(n, w, block):
+    """Merge-path rank kernel vs jnp ref vs lexsort: heavy key ties, the
+    final column (the index tiebreak) unique — ranks are the interleaved
+    output permutation."""
+    rng = np.random.default_rng(n + w)
+    keys = rng.integers(0, 4, size=(n, w)).astype(np.int32)
+    keys[:, -1] = rng.permutation(n).astype(np.int32)  # strict uniqueness
+    got = np.asarray(ops.merge_path_ranks(jnp.asarray(keys), block=block))
+    want = np.asarray(ref.merge_path_ranks_ref(jnp.asarray(keys)))
+    np.testing.assert_array_equal(got, want)
+    assert sorted(got.tolist()) == list(range(n))
+    order = np.lexsort(tuple(keys[:, j] for j in range(w - 1, -1, -1)))
+    lex_ranks = np.empty(n, np.int64)
+    lex_ranks[order] = np.arange(n)
+    np.testing.assert_array_equal(got, lex_ranks)
+
+
 def test_prefix_pack_matches_encoding_records():
     """Kernel output == the canonical map-phase encoding (text mode)."""
     from repro.core import encoding

@@ -23,6 +23,7 @@ from repro.core.store import (
     InMemoryBackend,
     WindowCursor,
     index_request_bytes,
+    pack_keys_np,
 )
 from repro.data.chunk_store import (
     ChunkedCorpusReader,
@@ -224,9 +225,9 @@ def test_cursor_release_returns_frontier_bytes():
     cur.prefetch(np.array([0, 1, 2], np.int64))
     assert cur.cached_windows == 3
     assert store.frontier_bytes == 3 * cur.window_bytes
-    cur.window(0, 2)  # deepen suffix 0 to depth 2 (two more windows)
+    cur.key(0, 2)  # deepen suffix 0 to depth 2 (two more entries)
     assert cur.cached_windows == 5
-    cur.release(0)  # whole chain (3 windows) released at once
+    cur.release(0)  # whole chain (3 entries) released at once
     assert cur.cached_windows == 2
     assert store.frontier_bytes == 2 * cur.window_bytes
     cur.release(0)  # double release is a no-op
@@ -251,8 +252,10 @@ def test_cursor_offer_rejects_gaps_and_accounts():
     assert cur.cached_windows == 2
     assert store.frontier_bytes == 2 * cur.window_bytes
     assert store.requests == pre  # offers never hit the store
-    # offered windows are re-served without a fetch
-    np.testing.assert_array_equal(cur.window(7, 1), w)
+    # offered windows are packed on the way in and re-served without a fetch
+    keys, ended = cur.key(7, 1)
+    np.testing.assert_array_equal(keys, pack_keys_np(w, CFG))
+    assert not ended  # no zero token: the suffix continues past the window
     assert store.requests == pre
     cur.release(7)
     assert cur.cached_windows == 0 and store.frontier_bytes == 0
@@ -261,9 +264,25 @@ def test_cursor_offer_rejects_gaps_and_accounts():
 def test_cursor_offered_window_is_an_owned_copy():
     store, cur = _cursor_store()
     w = np.ones(store.k, np.int32)
+    want = pack_keys_np(w, CFG).copy()
     cur.offer(9, 0, w)
     w[:] = 99  # mutating the caller's buffer must not corrupt the cache
-    assert (cur.window(9, 0) == 1).all()
+    np.testing.assert_array_equal(cur.key(9, 0)[0], want)
+
+
+def test_cursor_less_matches_window_semantics():
+    """Packed-key compare == raw token-window compare: suffixes of an
+    all-equal text order purely by index (deep ties), and a mixed text
+    orders by first differing token."""
+    store, cur = _cursor_store()
+    assert cur.less(3, 1)  # suffix(3) is a proper prefix of suffix(1)
+    assert not cur.less(1, 3)
+    text = np.array([2, 1, 3, 1, 2], np.int32)
+    store2 = CorpusStore(text, CFG, request_capacity=64)
+    cur2 = WindowCursor(store2)
+    order = sorted(range(5), key=lambda i: (list(text[i:]) + [0], i))
+    for a, b in zip(order, order[1:], strict=False):
+        assert cur2.less(a, b) and not cur2.less(b, a)
 
 
 def test_index_request_bytes_derivation():

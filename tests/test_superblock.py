@@ -167,12 +167,13 @@ def _merge_bytes(corpus, sb, lengths=None):
 
 
 def test_kway_merge_traffic_beats_rerank_3x_random():
-    """The acceptance ratio: boundary-exact k-way vs the PR-1 re-rank merge
-    at equal SuperblockConfig, >= 3 superblocks, random reads."""
+    """The PR-2 acceptance ratio: boundary-exact k-way vs the PR-1 re-rank
+    merge at equal SuperblockConfig, >= 3 superblocks, random reads."""
     rng = np.random.default_rng(0)
     reads = rng.integers(1, 5, size=(48, 12)).astype(np.int32)
     ref = naive_sa_reads(reads)
-    kway, b_kway = _merge_bytes(reads, SuperblockConfig(num_superblocks=4))
+    kway, b_kway = _merge_bytes(
+        reads, SuperblockConfig(num_superblocks=4, merge_algorithm="kway"))
     rerank, b_rerank = _merge_bytes(
         reads, SuperblockConfig(num_superblocks=4, merge_algorithm="rerank")
     )
@@ -186,7 +187,8 @@ def test_kway_merge_traffic_beats_rerank_3x_repetitive():
     a deep tie broken only by index."""
     reads = np.tile(np.array([1, 2] * 6, np.int32), (36, 1))
     ref = naive_sa_reads(reads)
-    kway, b_kway = _merge_bytes(reads, SuperblockConfig(num_superblocks=3))
+    kway, b_kway = _merge_bytes(
+        reads, SuperblockConfig(num_superblocks=3, merge_algorithm="kway"))
     rerank, b_rerank = _merge_bytes(
         reads, SuperblockConfig(num_superblocks=3, merge_algorithm="rerank")
     )
@@ -197,13 +199,14 @@ def test_kway_merge_traffic_beats_rerank_3x_repetitive():
 
 def test_device_backend_reads_random_and_repetitive():
     """merge_backend="device": oracle-exact, capacity bound preserved, and
-    the same >= 3x traffic win as the host backend."""
+    the same >= 3x traffic win as the host backend (k-way vs rerank)."""
     rng = np.random.default_rng(5)
     for corpus in (
         rng.integers(1, 5, size=(48, 12)).astype(np.int32),
         np.tile(np.array([1, 2] * 6, np.int32), (36, 1)),
     ):
-        sb = SuperblockConfig(num_superblocks=3, merge_backend="device")
+        sb = SuperblockConfig(num_superblocks=3, merge_backend="device",
+                              merge_algorithm="kway")
         res, b_kway = _merge_bytes(corpus, sb)
         np.testing.assert_array_equal(res.suffix_array, naive_sa_reads(corpus))
         _check_bounded(res, plan_superblocks(corpus.shape, CFG, sb))
@@ -215,13 +218,14 @@ def test_device_backend_reads_random_and_repetitive():
 
 def test_device_backend_text_modes():
     """Device backend in text mode: the boundary risk set (and the rerank
-    algorithm's buckets) are ranked by the device refiner."""
+    algorithm's buckets / merge-path tie groups) are ranked by the device
+    refiner."""
     rng = np.random.default_rng(6)
     text = rng.integers(1, 5, size=(480,)).astype(np.int32)
     rep = np.tile(np.array([1, 2], np.int32), 120)
     for corpus, oracle in ((text, doubling_sa_text(text)),
                            (rep, naive_sa_text(rep))):
-        for alg in ("kway", "rerank"):
+        for alg in ("merge_path", "kway", "rerank"):
             sb = SuperblockConfig(num_superblocks=3, merge_backend="device",
                                   merge_algorithm=alg)
             res = build_suffix_array_superblock(corpus, cfg=CFG, sb=sb)
@@ -356,13 +360,20 @@ def test_streaming_variable_length_reads(tmp_path):
 
 
 def test_streaming_scratch_is_cleaned_up(tmp_path):
+    """Scratch (serialized corpus, run spills) is removed; only the streamed
+    output SA memmap survives when spill_dir is set (ISSUE 5 satellite)."""
     rng = np.random.default_rng(14)
     text = rng.integers(1, 5, size=(360,)).astype(np.int32)
     res = build_suffix_array_superblock(text, cfg=CFG, sb=SuperblockConfig(
         num_superblocks=3, store_backend="chunked",
         spill_dir=str(tmp_path)))
     np.testing.assert_array_equal(res.suffix_array, doubling_sa_text(text))
-    assert os.listdir(str(tmp_path)) == []  # scratch subdir removed
+    # scratch subdir removed; the output memmap is the only survivor
+    assert os.listdir(str(tmp_path)) == ["suffix_array.npy"]
+    assert isinstance(res.suffix_array, np.memmap)
+    # the memmap is the .npy itself: reopening reads the same SA
+    reopened = np.load(str(tmp_path / "suffix_array.npy"), mmap_mode="r")
+    np.testing.assert_array_equal(np.asarray(reopened), doubling_sa_text(text))
 
 
 def test_streaming_rejects_device_merge_backend():
