@@ -16,7 +16,14 @@ import time
 
 
 def main() -> None:
-    from benchmarks import efficiency, footprint, partition, scaling, throughput
+    from benchmarks import (
+        efficiency,
+        footprint,
+        partition,
+        scaling,
+        serving,
+        throughput,
+    )
 
     sections = {
         "footprint": footprint.run,          # Tables III & V
@@ -31,6 +38,9 @@ def main() -> None:
         "streaming": scaling.run_streaming,
         # merge-path tile merge vs heap walk (round-trip ratio gate)
         "merge": scaling.run_merge,
+        # batched query engine vs host-serial search (identity gates) +
+        # save->open round trip + qps/latency under a hot-set replay
+        "serve": serving.run,
     }
     ap = argparse.ArgumentParser()
     ap.add_argument("sections", nargs="*", metavar="SECTION",

@@ -1,0 +1,172 @@
+"""Query-serving benchmark: the built index answering batched count /
+locate / align through ``repro.serve.sa_engine`` (paper §I's application
+side — the SA exists to be queried).
+
+Correctness is gated loudly (AssertionError fails CI):
+
+* every engine count/locate/align result is identical to the host-serial
+  ``core.search`` reference over the same store, for random and repetitive
+  corpora, in both text and reads mode, including absent / empty /
+  longer-than-corpus patterns;
+* a save -> open round trip through both store backends (host-resident and
+  disk-chunked) serves the same answers with **no rebuild**.
+
+Rows record the serving perf trajectory per case: build + open wall time,
+qps at a fixed batch size, per-query p50/p95 latency, result-cache hit rate
+under a hot-set replay, and store round-trip counts — consumed by
+``benchmarks.run serve --json``.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.config import SAConfig
+from repro.core.search import locate_store, search_store
+from repro.data.corpus import synth_dna_reads, synth_token_corpus
+from repro.serve.sa_engine import SuffixArrayIndex
+
+_QUERIES = 600
+_BATCH = 48
+_HOT_FRACTION = 0.3
+
+
+def _patterns(rng, corpus_like, vocab, n_pats, max_len):
+    """Mixed workload: corpus-sampled (hits), random (mostly misses), plus
+    the adversarial shapes (empty / absent-token / longer-than-corpus)."""
+    flat = np.asarray(corpus_like).ravel()
+    flat = flat[flat > 0]
+    pats = []
+    for _ in range(n_pats):
+        m = int(rng.integers(1, max_len + 1))
+        if rng.random() < 0.5 and flat.size > m:
+            i = int(rng.integers(0, flat.size - m))
+            pats.append(flat[i : i + m].astype(np.int64))
+        else:
+            pats.append(rng.integers(1, vocab + 1, m).astype(np.int64))
+    pats.append(np.zeros(0, np.int64))                      # empty
+    pats.append(np.array([vocab + 3], np.int64))            # absent token
+    pats.append(np.full(flat.size + 8, 1, np.int64))        # longer than corpus
+    return pats
+
+
+def _gate_case(name, corpus, lengths, cfg, rng, rows, csv):
+    build_t0 = time.perf_counter()
+    with tempfile.TemporaryDirectory() as tmp:
+        index_dir = os.path.join(tmp, "ix")
+        idx = SuffixArrayIndex.build(corpus, lengths=lengths, cfg=cfg,
+                                     index_dir=index_dir)
+        build_s = time.perf_counter() - build_t0
+        n = int(np.asarray(idx.sa).shape[0])
+        text_mode = idx.store.text_mode
+        pats = _patterns(rng, corpus, cfg.vocab_size, 40, max_len=10)
+
+        # --- correctness gates: engine == host-serial reference -------------
+        counts = idx.count(pats)
+        located = idx.locate(pats)
+        for p, c, occ in zip(pats, counts, located, strict=True):
+            lo, hi = search_store(idx.store, idx.sa, p)
+            if int(c) != hi - lo:
+                raise AssertionError(
+                    f"serving regression [{name}]: engine count {int(c)} != "
+                    f"reference {hi - lo} for pattern {list(map(int, p))}")
+            ref_occ = locate_store(idx.store, idx.sa, p)
+            if not np.array_equal(occ, ref_occ):
+                raise AssertionError(
+                    f"serving regression [{name}]: engine locate differs "
+                    f"from reference for pattern {list(map(int, p))}")
+        if not text_mode:
+            sb = idx.store.stride_bits
+            for p, occ in zip(pats[:8], located[:8], strict=True):
+                ref = [(int(g) >> sb, int(g) & ((1 << sb) - 1)) for g in occ]
+                if idx.align([p])[0] != ref:
+                    raise AssertionError(
+                        f"serving regression [{name}]: align() decode "
+                        f"mismatch for pattern {list(map(int, p))}")
+
+        # --- save -> open round trip, both backends, no rebuild -------------
+        open_s = {}
+        for backend in ("chunked", "memory"):
+            t0 = time.perf_counter()
+            with SuffixArrayIndex.open(index_dir,
+                                       store_backend=backend) as reopened:
+                open_s[backend] = time.perf_counter() - t0
+                if reopened.lcp is None:
+                    raise AssertionError(
+                        f"serving regression [{name}]: reopened ({backend}) "
+                        f"index lost its LCP array")
+                re_counts = reopened.count(pats)
+                if not np.array_equal(re_counts, counts):
+                    raise AssertionError(
+                        f"serving regression [{name}]: reopened ({backend}) "
+                        f"index answers differ from the built one")
+
+        # --- qps / latency under a hot-set replay ---------------------------
+        hot = pats[: max(2, len(pats) // 8)]
+        lat = []
+        served = 0
+        t0 = time.perf_counter()
+        while served < _QUERIES:
+            b = min(_BATCH, _QUERIES - served)
+            batch = _patterns(rng, corpus, cfg.vocab_size, b - 3, max_len=10)
+            take = np.flatnonzero(rng.random(len(batch)) < _HOT_FRACTION)
+            for i in take:
+                batch[i] = hot[int(rng.integers(0, len(hot)))]
+            t1 = time.perf_counter()
+            idx.count(batch)
+            lat.append((time.perf_counter() - t1) / len(batch))
+            served += len(batch)
+        wall = time.perf_counter() - t0
+        lat_us = np.sort(np.array(lat)) * 1e6
+        st = idx.stats()
+        hit_rate = st["cache_hits"] / max(
+            st["cache_hits"] + st["cache_misses"], 1)
+        rows.append(dict(
+            case=name,
+            suffixes=n,
+            shards=st["num_shards"],
+            build_s=build_s,
+            open_chunked_s=open_s["chunked"],
+            open_memory_s=open_s["memory"],
+            qps=served / wall,
+            p50_us=float(lat_us[len(lat_us) // 2]),
+            p95_us=float(lat_us[int(len(lat_us) * 0.95)]),
+            cache_hit_rate=hit_rate,
+            search_rounds=st["search_rounds"],
+            compare_rounds=st["compare_rounds"],
+            store_requests=st["store_requests"],
+        ))
+        idx.close()
+
+
+def run(csv=True):
+    rng = np.random.default_rng(7)
+    rows = []
+    cases = (
+        ("text_random", synth_token_corpus(4000, 4, seed=7)[0], None,
+         SAConfig(mode="text", vocab_size=4)),
+        ("text_repetitive", np.tile(np.array([1, 2, 1, 3], np.int32), 600),
+         None, SAConfig(mode="text", vocab_size=3)),
+        ("reads_random", synth_dna_reads(160, 24, seed=7), None,
+         SAConfig(vocab_size=4)),
+    )
+    for name, corpus, lengths, cfg in cases:
+        _gate_case(name, corpus, lengths, cfg, rng, rows, csv)
+    if csv:
+        print("# serving: batched query engine vs host-serial reference "
+              "(gated), qps/latency under hot-set replay")
+        cols = list(rows[0])
+        print(",".join(cols))
+        for r in rows:
+            print(",".join(
+                f"{r[c]:.1f}" if isinstance(r[c], float) and c != "cache_hit_rate"
+                else (f"{r[c]:.3f}" if isinstance(r[c], float) else str(r[c]))
+                for c in cols))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,12 +1,16 @@
-"""Quickstart: reproduce paper Table I (SA of SINICA$), then build the SA of
-a small paired-end DNA read set with the distributed scheme and verify it
-against the exact oracle.
+"""Quickstart: reproduce paper Table I (SA of SINICA$), build the SA of a
+small paired-end DNA read set with the distributed scheme, verify it against
+the exact oracle, then run the whole index lifecycle through the unified
+API — build → query → save → open → query (paper §I's alignment use case).
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import os
+import tempfile
+
 import numpy as np
 
-from repro.config import SAConfig
+from repro import SAConfig, SuffixArrayIndex
 from repro.core.oracle import naive_sa_reads
 from repro.core.pipeline import build_suffix_array
 from repro.data.corpus import synth_dna_reads
@@ -37,3 +41,21 @@ print("footprint units (input = 1):")
 for k, v in res.footprint.units().items():
     print(f"  {k:>15}: {v if isinstance(v, int) else round(v, 3)}")
 print("matches exact oracle: True")
+
+# --- the unified API: build -> query -> save -> open -> query ---------------
+idx = SuffixArrayIndex.build(reads, cfg=cfg)
+seed = reads[5, 10:16].astype(np.int64)  # a 6-mer seed from read 5
+hits = idx.align(seed)  # sorted (read_id, offset) pairs
+print(f"\nalign seed {list(map(int, seed))}: {idx.count(seed)} hits, "
+      f"first {hits[:4]}")
+assert (5, 10) in hits
+
+with tempfile.TemporaryDirectory() as tmp:
+    index_dir = os.path.join(tmp, "index")
+    idx.save(index_dir)  # SA + LCP + corpus + manifest
+    with SuffixArrayIndex.open(index_dir) as reopened:  # no rebuild
+        assert reopened.align(seed) == hits
+        counts = reopened.count([seed, seed[:3], np.array([1, 2], np.int64)])
+        print(f"reopened from {os.path.basename(index_dir)}/: "
+              f"batched counts {list(map(int, counts))}")
+print("save -> open round trip: True")

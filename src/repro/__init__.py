@@ -1,0 +1,47 @@
+"""Suffix-array construction and serving (MapReduce + in-memory store repro).
+
+Public surface::
+
+    from repro import SuffixArrayIndex, SAConfig
+
+    idx = SuffixArrayIndex.build(corpus, cfg=SAConfig(vocab_size=4))
+    idx.count(pattern); idx.locate(pattern); idx.align(pattern)
+    idx.save("/data/index");  idx = SuffixArrayIndex.open("/data/index")
+
+Imports are lazy (PEP 562) so ``import repro`` stays cheap and pulling the
+facade does not drag jax compilation in before it is needed.
+"""
+from __future__ import annotations
+
+__all__ = [
+    "SAConfig",
+    "SuperblockConfig",
+    "SuffixArrayIndex",
+    "ShardedSAEngine",
+    "build_suffix_array",
+    "build_suffix_array_auto",
+]
+
+_LAZY = {
+    "SAConfig": ("repro.config", "SAConfig"),
+    "SuperblockConfig": ("repro.config", "SuperblockConfig"),
+    "SuffixArrayIndex": ("repro.serve.sa_engine", "SuffixArrayIndex"),
+    "ShardedSAEngine": ("repro.serve.sa_engine", "ShardedSAEngine"),
+    "build_suffix_array": ("repro.core.pipeline", "build_suffix_array"),
+    "build_suffix_array_auto": ("repro.core.superblock",
+                                "build_suffix_array_auto"),
+}
+
+
+def __getattr__(name: str):
+    try:
+        module, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(module), attr)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -15,6 +15,8 @@ from repro.config.base import (
     SuperblockConfig,
     TrainConfig,
     LM_SHAPES,
+    asdict,
+    replace,
 )
 from repro.config.registry import get_arch, list_archs, register_arch
 
@@ -31,6 +33,8 @@ __all__ = [
     "SuperblockConfig",
     "TrainConfig",
     "LM_SHAPES",
+    "asdict",
+    "replace",
     "get_arch",
     "list_archs",
     "register_arch",

@@ -379,6 +379,17 @@ class SuperblockConfig:
       ``{spill_dir}/suffix_array.npy`` disk memmap, which is returned as
       ``SAResult.suffix_array`` — no O(n) host output allocation.  The file
       outlives the build (scratch is still cleaned up).
+    ``emit_lcp``: also produce the adjacent-pair LCP array (the query
+      engine's O(m + log n) companion artifact, ``repro.core.lcp``).  The
+      out-of-core merge computes it as pieces stream out (emit order is
+      final order, so each pair costs one adjacent compare); single-pass
+      builds recompute it post-hoc.  Streamed to ``{spill_dir}/lcp.npy``
+      when spilling, host array otherwise.  Returned as ``SAResult.lcp``.
+    ``write_manifest``: finalize ``spill_dir`` as a reopenable index
+      directory (``repro.core.index_io``): ``manifest.json`` + the SA (+
+      LCP) arrays + the serialized corpus (or a pointer to the caller's own
+      corpus file).  Requires ``spill_dir``.  ``SuffixArrayIndex.open``
+      serves such a directory with no rebuild.
     """
 
     max_records_per_run: int = 0
@@ -392,6 +403,8 @@ class SuperblockConfig:
     chunk_records: int = 0
     cache_budget_bytes: int = 0
     spill_dir: Optional[str] = None
+    emit_lcp: bool = False
+    write_manifest: bool = False
 
 
 # ---------------------------------------------------------------------------

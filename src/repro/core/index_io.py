@@ -1,0 +1,203 @@
+"""Persistent suffix-array index layout: manifest + SA/LCP arrays + corpus.
+
+A *built index* is a directory the query engine can reopen with no rebuild
+and no re-threading of the corpus by hand (Giacomelli's Bigtable SA: the
+index is a persistent, queryable store — construction is just its producer):
+
+    {index_dir}/
+      manifest.json       geometry, SAConfig echo, artifact pointers, stats
+      suffix_array.npy    (n,) int64 global suffix indexes, final order
+      lcp.npy             (n,) int64 adjacent-pair LCP array (optional)
+      corpus.sachunk      chunked corpus (repro.data.chunk_store format),
+                          unless the manifest points at an external corpus
+                          file the caller already owns
+
+Writers: the out-of-core build streams ``suffix_array.npy``/``lcp.npy``
+directly into ``spill_dir`` and calls :func:`save_index` to finalize
+(``SuperblockConfig.write_manifest``); ``SuffixArrayIndex.save`` does the
+same for in-memory results.  Reader: :func:`open_index` reconstructs a
+read-only :class:`~repro.core.store.StoreBackend` over the persisted corpus
+plus memmapped SA/LCP — the ``CorpusStore`` open path.
+
+All artifact pointers in the manifest are relative to the index directory
+when the artifact lives inside it (the directory stays relocatable), and
+absolute when it points at an external corpus file.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.config import SAConfig, asdict
+from repro.core.store import (
+    ChunkedFileBackend,
+    InMemoryBackend,
+    StoreBackend,
+)
+
+MANIFEST_NAME = "manifest.json"
+SA_FILE = "suffix_array.npy"
+LCP_FILE = "lcp.npy"
+CORPUS_FILE = "corpus.sachunk"
+FORMAT = "repro-sa-index"
+VERSION = 1
+
+# Items per read_items batch when serializing a backend's corpus to disk —
+# bounds the host copy during save regardless of corpus size.
+_SERIALIZE_BATCH = 1 << 16
+
+
+def _same_file(a: Optional[str], b: str) -> bool:
+    return a is not None and os.path.abspath(a) == os.path.abspath(b)
+
+
+def _write_array(arr: np.ndarray, path: str) -> None:
+    """np.save via tmp+rename unless ``arr`` is already memmapped at
+    ``path`` (the streaming build's sink wrote it in place)."""
+    if isinstance(arr, np.memmap) and _same_file(getattr(arr, "filename", None), path):
+        arr.flush()
+        return
+    tmp = path + ".tmp.npy"  # np.save appends .npy to suffix-less paths
+    np.save(tmp, np.asarray(arr))
+    os.replace(tmp, path)
+
+
+def _serialize_corpus(backend: StoreBackend, path: str, chunk_items: int = 0) -> None:
+    """Stream the backend's items into a chunked corpus file."""
+    from repro.data.chunk_store import write_chunked_stream
+
+    def batches():
+        for lo in range(0, backend.n, _SERIALIZE_BATCH):
+            yield backend.read_items(lo, min(lo + _SERIALIZE_BATCH, backend.n))
+
+    write_chunked_stream(batches(), path, chunk_items=chunk_items)
+
+
+def save_index(
+    index_dir: str,
+    cfg: SAConfig,
+    backend: StoreBackend,
+    sa: np.ndarray,
+    lcp: Optional[np.ndarray] = None,
+    stats: Optional[Dict[str, Any]] = None,
+    corpus_ref: Optional[str] = None,
+    chunk_items: int = 0,
+) -> str:
+    """Write a complete index directory; returns the manifest path.
+
+    ``corpus_ref``: a persistent chunked corpus file to *point at* instead
+    of serializing (the user's own ``--corpus-file``, or a file the build
+    already placed inside ``index_dir``).  None serializes the backend's
+    items into ``{index_dir}/corpus.sachunk``.  Arrays already memmapped at
+    their target paths (the streaming sink's output) are not rewritten.
+    """
+    os.makedirs(index_dir, exist_ok=True)
+    _write_array(sa, os.path.join(index_dir, SA_FILE))
+    if lcp is not None:
+        _write_array(lcp, os.path.join(index_dir, LCP_FILE))
+
+    if corpus_ref is None:
+        corpus_path = os.path.join(index_dir, CORPUS_FILE)
+        if not _same_file(getattr(backend, "path", None), corpus_path):
+            _serialize_corpus(backend, corpus_path, chunk_items)
+        corpus_entry = CORPUS_FILE
+    else:
+        ref = os.path.abspath(corpus_ref)
+        inside = os.path.dirname(ref) == os.path.abspath(index_dir)
+        corpus_entry = os.path.basename(ref) if inside else ref
+
+    manifest = {
+        "format": FORMAT,
+        "version": VERSION,
+        "suffix_array": SA_FILE,
+        "lcp": LCP_FILE if lcp is not None else None,
+        "corpus": {"kind": "chunked", "path": corpus_entry},
+        "geometry": {
+            "text_mode": bool(backend.text_mode),
+            "items": int(backend.n),
+            "row_len": int(backend.row_len),
+            "stride_bits": int(backend.stride_bits),
+            "suffixes": int(np.asarray(sa).shape[0]),
+        },
+        "sa_config": asdict(cfg),
+        "stats": _json_safe(stats or {}),
+    }
+    mpath = os.path.join(index_dir, MANIFEST_NAME)
+    tmp = mpath + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    os.replace(tmp, mpath)
+    return mpath
+
+
+def _json_safe(obj: Any) -> Any:
+    """Stats dicts carry numpy scalars; coerce to plain json types (drop
+    anything that still won't serialize rather than failing the save)."""
+    if isinstance(obj, dict):
+        return {str(k): _json_safe(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_json_safe(v) for v in obj]
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if isinstance(obj, np.ndarray):
+        return obj.tolist() if obj.size <= 64 else f"<array {obj.shape}>"
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    return str(obj)
+
+
+def read_manifest(index_dir: str) -> Dict[str, Any]:
+    mpath = os.path.join(index_dir, MANIFEST_NAME)
+    with open(mpath) as f:
+        manifest = json.load(f)
+    if manifest.get("format") != FORMAT:
+        raise ValueError(f"{mpath}: not a {FORMAT} manifest")
+    if manifest.get("version", 0) > VERSION:
+        raise ValueError(
+            f"{mpath}: version {manifest['version']} is newer than "
+            f"this reader ({VERSION})"
+        )
+    return manifest
+
+
+def open_index(
+    index_dir: str,
+    store_backend: str = "chunked",
+    cache_budget_bytes: int = 0,
+) -> Tuple[StoreBackend, np.ndarray, Optional[np.ndarray], Dict[str, Any]]:
+    """Read-only open: ``(backend, sa, lcp, manifest)``, no rebuild.
+
+    ``store_backend`` picks the corpus residency regime for serving:
+    ``"chunked"`` (default) keeps the corpus on disk behind the budgeted LRU
+    chunk cache; ``"memory"`` materializes it host-resident for latency.
+    The SA (and LCP, when present) are memmapped read-only.
+    """
+    manifest = read_manifest(index_dir)
+    cfg = SAConfig(**manifest["sa_config"])
+
+    corpus_path = manifest["corpus"]["path"]
+    if not os.path.isabs(corpus_path):
+        corpus_path = os.path.join(index_dir, corpus_path)
+    if store_backend == "chunked":
+        backend: StoreBackend = ChunkedFileBackend(
+            corpus_path, cfg, cache_budget_bytes=cache_budget_bytes
+        )
+    elif store_backend == "memory":
+        from repro.data.chunk_store import ChunkedCorpusReader
+
+        with ChunkedCorpusReader(corpus_path) as reader:
+            corpus = reader.read_items(0, reader.meta.items)
+        backend = InMemoryBackend(corpus, cfg)
+    else:
+        raise ValueError(f"unknown store backend {store_backend!r}")
+
+    sa = np.load(os.path.join(index_dir, SA_FILE), mmap_mode="r")
+    lcp = None
+    if manifest.get("lcp"):
+        lcp = np.load(os.path.join(index_dir, LCP_FILE), mmap_mode="r")
+    return backend, sa, lcp, manifest

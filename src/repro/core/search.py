@@ -1,11 +1,17 @@
 """Pattern matching over the constructed suffix array (paper §I: "SA is a
 cardinal data structure in many pattern matching applications").
 
-Classic O(|P| log n) binary search over SA order, working directly against
-the same corpus layouts the pipelines produce (read-set or long-text),
-suffix content served by the same window semantics as the store.  This is
-the *consumer* side of the index the paper builds: sequence alignment seeds,
-substring counting (infini-gram style), contamination lookup.
+Retargeted (ISSUE 6) to run against a :class:`~repro.core.store.CorpusStore`
+instead of raw host arrays: suffix content is served by the same windowed
+fetch + ``pack_keys_np`` order-preserving packing the construction pipelines
+compare with, so an index served from *any* backend — host-resident array or
+the budgeted disk-chunk cache — answers queries through one shared compare
+path.  This module is the O(|P| log n) host-serial reference; the batched,
+sharded, LCP-accelerated production path is ``repro.serve.sa_engine``.
+
+The original raw-array signatures (``search_text`` / ``count_occurrences`` /
+``find_occurrences`` / ``align_reads``) remain as thin deprecated wrappers
+that build a transient in-memory store per call.
 """
 from __future__ import annotations
 
@@ -13,54 +19,160 @@ from typing import List, Tuple
 
 import numpy as np
 
-
-def _suffix_tokens_text(text: np.ndarray, pos: int, k: int) -> np.ndarray:
-    w = text[pos : pos + k]
-    if len(w) < k:
-        w = np.concatenate([w, np.zeros(k - len(w), text.dtype)])
-    return w
+from repro.config import SAConfig
+from repro.core.store import CorpusStore, lex_less_rows, pack_keys_np
 
 
-def _cmp_pattern(text: np.ndarray, pos: int, pat: np.ndarray) -> int:
-    """-1 if suffix < pat, 0 if pat is a prefix of suffix, +1 if suffix > pat."""
-    w = _suffix_tokens_text(text, int(pos), len(pat))
-    for a, b in zip(w, pat, strict=True):
-        if a < b:
-            return -1
-        if a > b:
-            return 1
-    return 0
+# ---------------------------------------------------------------------------
+# store-served comparators (the shared compare path)
+# ---------------------------------------------------------------------------
+
+
+def suffix_pattern_cmp(store: CorpusStore, gidx: np.ndarray,
+                       pattern: np.ndarray) -> np.ndarray:
+    """Batched trichotomy of suffixes against a pattern prefix.
+
+    Returns (m,) int8: -1 suffix < pattern, +1 suffix > pattern, 0 the
+    pattern is a prefix of the suffix.  Window levels are compared as packed
+    key words (``pack_keys_np``), the suffix window masked to the pattern's
+    remaining length so the packed order is exactly token order over that
+    range; decided suffixes drop out of deeper fetch rounds.  Pattern tokens
+    must lie in ``1..cfg.vocab_size`` (packing is order-preserving only for
+    in-vocab tokens — :func:`search_store` handles out-of-vocab patterns).
+    """
+    gidx = np.asarray(gidx, np.int64).ravel()
+    pat = np.asarray(pattern, np.int64).ravel()
+    m = gidx.shape[0]
+    res = np.zeros(m, np.int8)
+    if pat.size == 0 or m == 0:
+        return res
+    k = store.k
+    undecided = np.arange(m)
+    for lv in range(-(-pat.size // k)):
+        if undecided.size == 0:
+            break
+        rem = min(k, pat.size - lv * k)
+        pw = np.zeros(k, np.int32)
+        pw[:rem] = pat[lv * k : lv * k + rem]
+        pkey = pack_keys_np(pw[None, :], store.cfg)
+        win = store.fetch_windows(gidx[undecided], lv)
+        if rem < k:
+            win = win.copy()
+            win[:, rem:] = 0  # compare only the pattern's remaining tokens
+        skey = pack_keys_np(win, store.cfg)
+        lt, eq = lex_less_rows(skey, np.broadcast_to(pkey, skey.shape))
+        res[undecided[lt]] = -1
+        res[undecided[~lt & ~eq]] = 1
+        undecided = undecided[eq]
+    return res
+
+
+def masked_cmp_np(sfx: np.ndarray, pat: np.ndarray, start: np.ndarray,
+                  stop: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Numpy mirror of the ``kernels/pattern_cmp`` Pallas kernel.
+
+    Row-wise compare of suffix vs pattern windows over the token range
+    ``[start, stop)``; returns ``(cmp, matched)`` — the engine's explicit
+    compare when ``cfg.use_pallas`` is off.  Operates on raw tokens (any
+    int values), unlike the packed path above.
+    """
+    sfx = np.asarray(sfx, np.int64)
+    pat = np.asarray(pat, np.int64)
+    b, k = sfx.shape
+    start = np.broadcast_to(np.asarray(start, np.int64), (b,))
+    stop = np.broadcast_to(np.asarray(stop, np.int64), (b,))
+    iota = np.broadcast_to(np.arange(k, dtype=np.int64)[None, :], (b, k))
+    in_rng = (iota >= start[:, None]) & (iota < stop[:, None])
+    eq = np.where(in_rng, sfx == pat, True)
+    first = np.min(np.where(eq, stop[:, None], iota), axis=1)
+    matched = first - start
+    rows = np.arange(b)
+    cols = np.minimum(first, k - 1)
+    sv, pv = sfx[rows, cols], pat[rows, cols]
+    neq = first < stop
+    cmp = np.where(neq, np.where(sv < pv, -1, np.where(sv > pv, 1, 0)), 0)
+    return cmp.astype(np.int32), matched.astype(np.int64)
+
+
+def search_store(store: CorpusStore, sa: np.ndarray,
+                 pattern) -> Tuple[int, int]:
+    """[lo, hi) range of SA rows whose suffixes start with ``pattern``.
+
+    ``sa`` holds global suffix indexes in the store's own packing (text
+    positions, or ``row << stride_bits | off`` for reads).  Out-of-vocab
+    pattern tokens match nothing: the search runs on the longest in-vocab
+    prefix and collapses to an empty range at the right insertion point.
+    """
+    pat = np.asarray(pattern, np.int64).ravel()
+    n = len(sa)
+    if pat.size == 0:
+        return 0, n
+    bad = np.flatnonzero((pat < 1) | (pat > store.cfg.vocab_size))
+    if bad.size:
+        j = int(bad[0])
+        prefix = pat[:j]
+        if pat[j] > store.cfg.vocab_size:
+            # every suffix extending `prefix` continues with a smaller token
+            hi = _bound(store, sa, prefix, upper=True) if j else n
+            return hi, hi
+        lo = _bound(store, sa, prefix, upper=False) if j else 0
+        return lo, lo
+    lo = _bound(store, sa, pat, upper=False)
+    hi = _bound(store, sa, pat, upper=True)
+    return lo, hi
+
+
+def _bound(store: CorpusStore, sa: np.ndarray, pat: np.ndarray,
+           upper: bool) -> int:
+    lo, hi = 0, len(sa)
+    while lo < hi:
+        mid = (lo + hi) // 2
+        c = int(suffix_pattern_cmp(
+            store, np.asarray(sa[mid : mid + 1], np.int64), pat)[0])
+        if c < 0 or (upper and c == 0):
+            lo = mid + 1
+        else:
+            hi = mid
+    return lo
+
+
+def count_store(store: CorpusStore, sa: np.ndarray, pattern) -> int:
+    lo, hi = search_store(store, sa, pattern)
+    return hi - lo
+
+
+def locate_store(store: CorpusStore, sa: np.ndarray, pattern) -> np.ndarray:
+    """Sorted (ascending) global indexes of every occurrence."""
+    lo, hi = search_store(store, sa, pattern)
+    return np.sort(np.asarray(sa[lo:hi], np.int64))
+
+
+# ---------------------------------------------------------------------------
+# deprecated raw-array wrappers (build a transient in-memory store per call)
+# ---------------------------------------------------------------------------
+
+
+def _wrapper_store(corpus: np.ndarray) -> CorpusStore:
+    vocab = int(corpus.max()) if corpus.size else 1
+    return CorpusStore(np.asarray(corpus, np.int32),
+                       SAConfig(vocab_size=max(vocab, 1)))
 
 
 def search_text(text: np.ndarray, sa: np.ndarray, pattern) -> Tuple[int, int]:
-    """Return the [lo, hi) SA range whose suffixes start with ``pattern``."""
-    pat = np.asarray(pattern, text.dtype)
-    lo, hi = 0, len(sa)
-    while lo < hi:  # lower bound
-        mid = (lo + hi) // 2
-        if _cmp_pattern(text, sa[mid], pat) < 0:
-            lo = mid + 1
-        else:
-            hi = mid
-    start = lo
-    hi = len(sa)
-    while lo < hi:  # upper bound
-        mid = (lo + hi) // 2
-        if _cmp_pattern(text, sa[mid], pat) <= 0:
-            lo = mid + 1
-        else:
-            hi = mid
-    return start, lo
+    """Deprecated: use :func:`search_store` (or ``SuffixArrayIndex``)."""
+    return search_store(_wrapper_store(np.asarray(text)), sa, pattern)
 
 
 def count_occurrences(text: np.ndarray, sa: np.ndarray, pattern) -> int:
+    """Deprecated: use :func:`count_store` (or ``SuffixArrayIndex``)."""
     lo, hi = search_text(text, sa, pattern)
     return hi - lo
 
 
 def find_occurrences(text: np.ndarray, sa: np.ndarray, pattern) -> List[int]:
+    """Deprecated: use :func:`locate_store` (or ``SuffixArrayIndex``)."""
     lo, hi = search_text(text, sa, pattern)
-    return sorted(int(p) for p in sa[lo:hi])
+    return sorted(int(p) for p in np.asarray(sa)[lo:hi])
 
 
 def align_reads(
@@ -70,36 +182,19 @@ def align_reads(
     pattern,
 ) -> List[Tuple[int, int]]:
     """Seed-alignment lookup over a read-set SA (the paper's bioinformatics
-    application): all (read_id, offset) whose suffix starts with pattern."""
-    pat = np.asarray(pattern, reads.dtype)
-    r_ids = (sa_gidx >> stride_bits).astype(np.int64)
-    offs = (sa_gidx & ((1 << stride_bits) - 1)).astype(np.int64)
+    application): all (read_id, offset) whose suffix starts with pattern.
 
-    def cmp(i: int) -> int:
-        row, off = int(r_ids[i]), int(offs[i])
-        w = reads[row, off : off + len(pat)]
-        if len(w) < len(pat):
-            w = np.concatenate([w, np.zeros(len(pat) - len(w), reads.dtype)])
-        for a, b in zip(w, pat, strict=True):
-            if a < b:
-                return -1
-            if a > b:
-                return 1
-        return 0
-
-    lo, hi = 0, len(sa_gidx)
-    while lo < hi:
-        mid = (lo + hi) // 2
-        if cmp(mid) < 0:
-            lo = mid + 1
-        else:
-            hi = mid
-    start = lo
-    hi = len(sa_gidx)
-    while lo < hi:
-        mid = (lo + hi) // 2
-        if cmp(mid) <= 0:
-            lo = mid + 1
-        else:
-            hi = mid
-    return sorted((int(r_ids[i]), int(offs[i])) for i in range(start, lo))
+    Deprecated wrapper: builds a transient store; the caller's
+    ``stride_bits`` packing is translated to the store's own when they
+    differ, so pre-existing SAs keep working unchanged.
+    """
+    reads = np.asarray(reads, np.int32)
+    store = _wrapper_store(reads)
+    sa = np.asarray(sa_gidx, np.int64)
+    mask = (1 << stride_bits) - 1
+    row, off = sa >> stride_bits, sa & mask
+    sa_cmp = sa if stride_bits == store.stride_bits else (
+        (row << store.stride_bits) | off)
+    lo, hi = search_store(store, sa_cmp, pattern)
+    return sorted((int(r), int(o)) for r, o in zip(row[lo:hi], off[lo:hi],
+                                                   strict=True))

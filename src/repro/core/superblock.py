@@ -65,6 +65,7 @@ from typing import Callable, List, Optional, Tuple
 import numpy as np
 
 from repro.config import SAConfig, SuperblockConfig
+from repro.core.lcp import lcp_from_sa, pairwise_lcp
 from repro.core.pipeline import DeviceRefiner, build_suffix_array
 from repro.core.store import (
     DEFAULT_CACHE_BUDGET,
@@ -246,7 +247,12 @@ def _resolve_backend(
         # several chunks must fit the LRU half-budget or caching degenerates
         chunk_items = chunk_items_for_budget(items, row_len, budget)
     assert scratch is not None
-    path = scratch.path("corpus.sachunk")
+    if sb.write_manifest and sb.spill_dir:
+        # the serialized corpus is an index artifact: place it in spill_dir
+        # itself (scratch is removed at build end, the index must outlive it)
+        path = os.path.join(sb.spill_dir, "corpus.sachunk")
+    else:
+        path = scratch.path("corpus.sachunk")
     write_chunked_corpus(corpus, path, chunk_items=chunk_items)
     return ChunkedFileBackend(path, cfg, cache_budget_bytes=budget // 2)
 
@@ -660,9 +666,19 @@ class _OutputSink:
     array by default, or — when ``SuperblockConfig.spill_dir`` is set — into
     a disk-backed ``.npy`` memmap, dropping the last O(n) host allocation
     (the returned ``SAResult.suffix_array`` is then the memmap itself).
+
+    With ``pair_lcp`` set (``SuperblockConfig.emit_lcp``) the sink also
+    produces the adjacent-pair LCP array as a side effect of emission: emit
+    order *is* final order, so ``lcp[i]`` is exactly one compare between
+    consecutive emitted suffixes — including across piece seams, via the
+    carried-over last index of the previous piece.  Batched internally so a
+    whole-run passthrough piece never materializes O(n) windows at once.
     """
 
-    def __init__(self, total: int, memmap_path: Optional[str] = None):
+    _LCP_BATCH = 1 << 16
+
+    def __init__(self, total: int, memmap_path: Optional[str] = None,
+                 lcp_path: Optional[str] = None, pair_lcp=None):
         self.total = int(total)
         self.written = 0
         self.pieces = 0
@@ -678,24 +694,67 @@ class _OutputSink:
                 self._tmp, mode="w+", dtype=np.int64, shape=(self.total,))
         else:
             self._out = np.empty(self.total, np.int64)
+        self._pair_lcp = pair_lcp
+        self.lcp_path = lcp_path if pair_lcp is not None else None
+        self._last: Optional[int] = None  # last emitted gidx (seam compare)
+        self._lcp: Optional[np.ndarray] = None
+        if pair_lcp is not None:
+            if self.lcp_path is not None:
+                self._lcp_tmp = (
+                    f"{self.lcp_path}.{os.getpid()}.{uuid.uuid4().hex}.tmp")
+                self._lcp = np.lib.format.open_memmap(
+                    self._lcp_tmp, mode="w+", dtype=np.int64,
+                    shape=(self.total,))
+            else:
+                self._lcp = np.empty(self.total, np.int64)
 
     def append(self, piece: np.ndarray) -> None:
         m = int(piece.shape[0])
         if m == 0:
             return
+        if self._pair_lcp is not None:
+            self._append_lcp(piece)
         self._out[self.written : self.written + m] = piece
         self.written += m
         self.pieces += 1
         self.max_piece = max(self.max_piece, m)
 
+    def _append_lcp(self, piece: np.ndarray) -> None:
+        p = np.asarray(piece)  # memmap pieces stay views, batches copy below
+        m = int(p.shape[0])
+        base = self.written
+        start = 0
+        if self._last is None:
+            self._lcp[base] = 0  # lcp[0] has no left neighbor
+            start = 1
+        for lo in range(start, m, self._LCP_BATCH):
+            hi = min(lo + self._LCP_BATCH, m)
+            right = np.asarray(p[lo:hi], np.int64)
+            left = np.empty(hi - lo, np.int64)
+            left[1:] = right[:-1]
+            left[0] = int(p[lo - 1]) if lo > 0 else self._last
+            self._lcp[base + lo : base + hi] = self._pair_lcp(left, right)
+        self._last = int(p[-1])
+
     def result(self) -> np.ndarray:
         assert self.written == self.total, (self.written, self.total)
+        if self.lcp_path is not None:
+            self._lcp.flush()
+            del self._lcp
+            os.replace(self._lcp_tmp, self.lcp_path)
+            self._lcp = np.load(self.lcp_path, mmap_mode="r+")
         if self.path is not None:
             self._out.flush()
             del self._out  # drop the write mapping before the rename
             os.replace(self._tmp, self.path)
             self._out = np.load(self.path, mmap_mode="r+")
         return self._out
+
+    @property
+    def lcp(self) -> Optional[np.ndarray]:
+        """The emitted LCP array (None unless built with ``pair_lcp``);
+        valid after :meth:`result`."""
+        return self._lcp
 
 
 class _RunTile:
@@ -1030,6 +1089,8 @@ def build_suffix_array_superblock(
         or (not isinstance(corpus, StoreBackend)
             and sb.store_backend == "chunked")
     )
+    if sb.spill_dir is not None:
+        os.makedirs(sb.spill_dir, exist_ok=True)
     scratch = _Scratch(sb.spill_dir) if needs_scratch else None
     backend: Optional[StoreBackend] = None
     try:
@@ -1054,12 +1115,28 @@ def _build_superblock(
     scratch: Optional[_Scratch],
     original_corpus,
 ) -> SAResult:
+    if sb.write_manifest and not sb.spill_dir:
+        raise ValueError(
+            "write_manifest needs spill_dir: the manifest finalizes that "
+            "directory as the reopenable index"
+        )
     plan = plan_superblocks(backend.shape, cfg, sb)
     if plan.num_superblocks <= 1:
-        return build_suffix_array(
+        res = build_suffix_array(
             backend.read_items(0, backend.n), lengths=lengths, cfg=cfg,
             mesh=mesh,
         )
+        # single-pass builds have no ordered emission to piggyback on: the
+        # LCP is recomputed post-hoc from the finished SA, and the index
+        # directory (when asked for) is written wholesale.
+        if sb.emit_lcp and res.lcp is None:
+            store = CorpusStore(None, cfg, backend=backend,
+                                request_capacity=sb.request_capacity)
+            res.lcp = lcp_from_sa(store, res.suffix_array)
+            res.stats["emit_lcp"] = True
+        if sb.write_manifest:
+            _write_index_manifest(res, backend, cfg, sb, scratch)
+        return res
     if sb.merge_backend not in ("host", "device"):
         raise ValueError(f"unknown merge_backend: {sb.merge_backend!r}")
     if sb.merge_algorithm not in ("merge_path", "kway", "rerank"):
@@ -1140,7 +1217,19 @@ def _build_superblock(
     total_suffixes = int(sum(r.size for r in local_sas))
     out_path = (os.path.join(sb.spill_dir, "suffix_array.npy")
                 if sb.spill_dir is not None else None)
-    sink = _OutputSink(total_suffixes, memmap_path=out_path)
+    pair_lcp = None
+    lcp_path = None
+    if sb.emit_lcp:
+        # emit order is final order: each emitted suffix's LCP is one
+        # adjacent compare against the previously emitted one, served by the
+        # same store the merge streams through (repro.core.lcp).
+        def pair_lcp(a, b):
+            return pairwise_lcp(store, a, b)
+
+        if sb.spill_dir is not None:
+            lcp_path = os.path.join(sb.spill_dir, "lcp.npy")
+    sink = _OutputSink(total_suffixes, memmap_path=out_path,
+                       lcp_path=lcp_path, pair_lcp=pair_lcp)
     peak_candidates = 0
 
     cur = WindowCursor(store)
@@ -1283,8 +1372,44 @@ def _build_superblock(
         "store_cache_hit_rate": backend.hit_rate,
         "spilled_runs": scratch.spilled_runs if scratch else 0,
         "spilled_bytes": scratch.spilled_bytes if scratch else 0,
+        "emit_lcp": bool(sb.emit_lcp),
     }
-    return SAResult(suffix_array=sa, footprint=fp, stats=stats)
+    res = SAResult(suffix_array=sa, footprint=fp, stats=stats, lcp=sink.lcp)
+    if sb.write_manifest:
+        _write_index_manifest(res, backend, cfg, sb, scratch)
+    return res
+
+
+def _write_index_manifest(
+    res: SAResult,
+    backend: StoreBackend,
+    cfg: SAConfig,
+    sb: SuperblockConfig,
+    scratch: Optional[_Scratch],
+) -> None:
+    """Finalize ``sb.spill_dir`` as a reopenable index directory.
+
+    The corpus is referenced in place when the backend serves a persistent
+    chunked file (the caller's own corpus file, or the copy
+    ``_resolve_backend`` already placed in ``spill_dir``); a scratch-resident
+    or in-memory corpus is serialized into the directory, since scratch dies
+    with the build.
+    """
+    from repro.core import index_io
+
+    corpus_ref = None
+    p = getattr(backend, "path", None)
+    if p is not None:
+        ap = os.path.abspath(p)
+        in_scratch = scratch is not None and ap.startswith(
+            os.path.abspath(scratch.dir) + os.sep)
+        if not in_scratch:
+            corpus_ref = ap
+    index_io.save_index(
+        sb.spill_dir, cfg, backend, res.suffix_array, res.lcp, res.stats,
+        corpus_ref=corpus_ref, chunk_items=sb.chunk_records,
+    )
+    res.stats["index_dir"] = sb.spill_dir
 
 
 def build_suffix_array_auto(
@@ -1300,10 +1425,13 @@ def build_suffix_array_auto(
     (array / chunked file path / store backend)."""
     sb = sb or SuperblockConfig()
     plan = plan_superblocks(corpus_shape_of(corpus), cfg, sb)
-    if plan.num_superblocks <= 1:
+    if (plan.num_superblocks <= 1
+            and not (sb.emit_lcp or sb.write_manifest)):
         if not isinstance(corpus, np.ndarray):
             corpus = _materialize_corpus(corpus, cfg)
         return build_suffix_array(corpus, lengths=lengths, cfg=cfg, mesh=mesh)
+    # index finalization (LCP / manifest) always runs through the superblock
+    # wrapper: its single-block early path owns the post-hoc LCP + save.
     return build_suffix_array_superblock(
         corpus, lengths=lengths, cfg=cfg, sb=sb, mesh=mesh
     )

@@ -18,7 +18,7 @@ index tie-breaking.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -136,6 +136,10 @@ class SAResult:
     suffix_array: np.ndarray
     footprint: Footprint
     stats: dict
+    # (n,) int64 adjacent-pair LCP array (lcp[i] = LCP(sa[i-1], sa[i]),
+    # lcp[0] = 0) when the build was asked for it (SuperblockConfig.emit_lcp
+    # / repro.core.lcp); None otherwise
+    lcp: Optional[np.ndarray] = None
 
     def read_offset(self, stride_bits: int) -> Tuple[np.ndarray, np.ndarray]:
         sa = self.suffix_array

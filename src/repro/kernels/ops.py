@@ -11,6 +11,7 @@ import jax
 from repro.kernels.bitonic_sort import bitonic_sort_tiles as _bitonic
 from repro.kernels.bucket_hist import bucket_hist as _bucket_hist
 from repro.kernels.merge_path import merge_path_ranks as _merge_path_ranks
+from repro.kernels.pattern_cmp import pattern_cmp as _pattern_cmp
 from repro.kernels.prefix_pack import prefix_pack as _prefix_pack
 from repro.kernels.window_gather import window_gather as _window_gather
 
@@ -39,3 +40,8 @@ def bitonic_sort_tiles(key_hi, key_lo, val, tile: int = 1024):
 
 def merge_path_ranks(keys, block: int = 256):
     return _merge_path_ranks(keys, block=block, interpret=_interpret())
+
+
+def pattern_cmp(sfx, pat, start, stop, block: int = 256):
+    return _pattern_cmp(sfx, pat, start, stop, block=block,
+                        interpret=_interpret())

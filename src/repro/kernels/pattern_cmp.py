@@ -1,0 +1,85 @@
+"""Pallas kernel: batched masked suffix-vs-pattern window compare (the query
+engine's one device compare per binary-search round).
+
+One row per live query: ``sfx`` is the suffix's K-token store window at the
+query's current depth, ``pat`` the pattern's K-token slice at the same depth
+(0-padded past the pattern end), and ``[start, stop)`` the in-window token
+range still undecided — ``start`` comes from the Manber–Myers L/R bound (the
+tokens before it are already known equal), ``stop`` from the pattern's
+remaining length.  The kernel reports, per row,
+
+    cmp     -1 / 0 / +1 : suffix <, ==, > pattern over [start, stop)
+    matched             : tokens matched before the first mismatch
+
+``cmp == 0`` means the whole range matched: the caller either declares the
+pattern found (range reached the pattern end) or advances one window level.
+A suffix ending inside the window compares via its padding ``0`` against a
+real pattern token (>= 1), yielding ``-1`` — exactly the store's suffix
+order, so no end-of-suffix special case exists here.
+
+Pure VPU work (iota masks + where + row min-reduce; no MXU, no dynamic
+addressing), gridded over blocks of query rows like ``merge_path``; the
+value-at-first-mismatch gather is a one-hot masked sum, not an index load.
+Padding rows carry ``start == stop == 0`` and fold to ``cmp = 0``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.kernels.compat import out_struct, vma_of as _vma
+
+
+def _kernel(sfx_ref, pat_ref, start_ref, stop_ref, out_ref):
+    sfx = sfx_ref[...]  # (B, K) int32 suffix windows
+    pat = pat_ref[...]  # (B, K) int32 pattern slices
+    start = start_ref[...]  # (B,) compare-from token offset
+    stop = stop_ref[...]  # (B,) compare-to token offset (exclusive)
+    b, k = sfx.shape
+    iota = lax.broadcasted_iota(jnp.int32, (b, k), 1)
+    in_rng = (iota >= start[:, None]) & (iota < stop[:, None])
+    eq = jnp.where(in_rng, sfx == pat, True)
+    # first in-range mismatch position; rows with none fold to `stop`
+    first = jnp.min(jnp.where(eq, stop[:, None], iota), axis=1)
+    matched = first - start
+    hit = iota == first[:, None]  # one-hot value gather at the mismatch
+    sv = jnp.sum(jnp.where(hit, sfx, 0), axis=1)
+    pv = jnp.sum(jnp.where(hit, pat, 0), axis=1)
+    neq = first < stop
+    cmp = jnp.where(neq & (sv < pv), -1, jnp.where(neq & (sv > pv), 1, 0))
+    out_ref[...] = jnp.stack(
+        [cmp.astype(jnp.int32), matched.astype(jnp.int32)], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def pattern_cmp(sfx: jnp.ndarray, pat: jnp.ndarray, start: jnp.ndarray,
+                stop: jnp.ndarray, block: int = 256,
+                interpret: bool = True) -> jnp.ndarray:
+    """(B, K) suffix/pattern windows + (B,) [start, stop) -> (B, 2) int32
+    ``[cmp, matched]`` rows (see module docstring)."""
+    n, k = sfx.shape
+    nblocks = max(1, -(-n // block))
+    pad = nblocks * block - n
+    sfx_p = jnp.pad(jnp.asarray(sfx, jnp.int32), ((0, pad), (0, 0)))
+    pat_p = jnp.pad(jnp.asarray(pat, jnp.int32), ((0, pad), (0, 0)))
+    start_p = jnp.pad(jnp.asarray(start, jnp.int32), (0, pad))
+    stop_p = jnp.pad(jnp.asarray(stop, jnp.int32), (0, pad))
+    out = pl.pallas_call(
+        _kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((block, k), lambda i: (i, 0)),
+            pl.BlockSpec((block, k), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block, 2), lambda i: (i, 0)),
+        out_shape=out_struct((nblocks * block, 2), jnp.int32,
+                             vma=_vma(sfx, pat)),
+        interpret=interpret,
+    )(sfx_p, pat_p, start_p, stop_p)
+    return out[:n]

@@ -46,6 +46,28 @@ def merge_path_ranks_ref(keys: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(lt.astype(jnp.int32), axis=1)
 
 
+def pattern_cmp_ref(sfx, pat, start, stop):
+    """(B, K) suffix/pattern windows + (B,) [start, stop) token ranges ->
+    (B, 2) ``[cmp, matched]`` (the batched-search compare oracle)."""
+    sfx = jnp.asarray(sfx, jnp.int32)
+    pat = jnp.asarray(pat, jnp.int32)
+    start = jnp.asarray(start, jnp.int32)
+    stop = jnp.asarray(stop, jnp.int32)
+    b, k = sfx.shape
+    iota = jnp.broadcast_to(jnp.arange(k, dtype=jnp.int32)[None, :], (b, k))
+    in_rng = (iota >= start[:, None]) & (iota < stop[:, None])
+    eq = jnp.where(in_rng, sfx == pat, True)
+    first = jnp.min(jnp.where(eq, stop[:, None], iota), axis=1)
+    matched = first - start
+    hit = iota == first[:, None]
+    sv = jnp.sum(jnp.where(hit, sfx, 0), axis=1)
+    pv = jnp.sum(jnp.where(hit, pat, 0), axis=1)
+    neq = first < stop
+    cmp = jnp.where(neq & (sv < pv), -1, jnp.where(neq & (sv > pv), 1, 0))
+    return jnp.stack([cmp.astype(jnp.int32), matched.astype(jnp.int32)],
+                     axis=1)
+
+
 def bitonic_sort_tiles_ref(key_hi, key_lo, val, tile: int):
     import jax
 

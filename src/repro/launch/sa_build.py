@@ -7,6 +7,8 @@
     PYTHONPATH=src python -m repro.launch.sa_build --reads 800 --read-len 48 \
         --max-records-per-run 10000 --store-backend chunked \
         --cache-budget 65536             # disk-streamed: bounded resident bytes
+    PYTHONPATH=src python -m repro.launch.sa_build --reads 2000 \
+        --index-dir /data/ix             # persist a queryable index directory
 
 Same pipeline the dry-run lowers for 256/512 shards; here it runs on the
 locally available devices.
@@ -74,6 +76,10 @@ def main():
     ap.add_argument("--chunk-records", type=int, default=0,
                     help="corpus items per on-disk chunk when serializing "
                          "(0 = derive from the cache budget)")
+    ap.add_argument("--index-dir", default=None,
+                    help="finalize the build as a reopenable index directory "
+                         "(SA + LCP + corpus + manifest; scheme mode only) — "
+                         "serve it with repro.launch.serve --index-dir")
     args = ap.parse_args()
 
     import numpy as np
@@ -102,6 +108,8 @@ def main():
             corpus = synth_dna_reads(args.reads, args.read_len, seed=args.seed,
                                      paired_end=args.paired_end)
 
+    if args.index_dir and args.mode != "scheme":
+        ap.error("--index-dir requires --mode scheme")
     sb = SuperblockConfig(
         num_superblocks=args.superblocks,
         max_records_per_run=args.max_records_per_run,
@@ -111,6 +119,9 @@ def main():
         store_backend=store_backend,
         chunk_records=args.chunk_records,
         cache_budget_bytes=args.cache_budget,
+        spill_dir=args.index_dir,
+        emit_lcp=bool(args.index_dir),
+        write_manifest=bool(args.index_dir),
     )
 
     source = corpus
@@ -177,6 +188,9 @@ def main():
               f"{res.stats['store_cache_hit_rate']:.2f}, "
               f"{res.stats['spilled_runs']} spilled runs "
               f"({res.stats['spilled_bytes']}B)")
+    if args.index_dir:
+        print(f"index: {res.stats['index_dir']} (serve with "
+              f"python -m repro.launch.serve --index-dir {args.index_dir})")
     print(f"stats: {res.stats}")
 
 

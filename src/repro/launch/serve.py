@@ -1,7 +1,19 @@
-"""Serving launcher: prefill + batched greedy decode for any --arch.
+"""Suffix-array query launcher: serve a built index directory.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch tiny-gemma3 \
-        --batch 4 --prompt-len 8 --gen 16
+    # explicit patterns (comma-separated tokens; repeatable)
+    PYTHONPATH=src python -m repro.launch.serve --index-dir /data/ix \
+        --pattern 1,3,2 --pattern 2,2
+
+    # synthetic query load: qps / latency over corpus-sampled patterns
+    PYTHONPATH=src python -m repro.launch.serve --index-dir /data/ix \
+        --queries 2000 --batch 64 --store-backend chunked --cache-budget 65536
+
+Flags mirror ``repro.launch.sa_build``: ``--store-backend`` picks where the
+corpus bytes live while serving (disk-chunked behind a ``--cache-budget``
+LRU, or fully host-resident), ``--batch`` is the engine batch per round.
+Build an index directory with ``sa_build --index-dir`` (or
+``SuffixArrayIndex.build(..., index_dir=...)``).  The LM decode launcher
+that used to live here is ``repro.launch.lm_serve``.
 """
 from __future__ import annotations
 
@@ -11,49 +23,113 @@ import time
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=8)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--index-dir", required=True,
+                    help="index directory written by sa_build --index-dir "
+                         "or SuffixArrayIndex.save()")
+    ap.add_argument("--store-backend", choices=["chunked", "memory"],
+                    default="chunked",
+                    help="serve the corpus from disk chunks (LRU-budgeted) "
+                         "or fully host-resident")
+    ap.add_argument("--cache-budget", type=int, default=0,
+                    help="chunked-backend resident-byte budget "
+                         "(0 = 64 MiB default)")
+    ap.add_argument("--result-cache", type=int, default=1 << 20,
+                    help="hot-pattern LRU result cache budget in bytes "
+                         "(0 disables)")
+    ap.add_argument("--batch", type=int, default=64,
+                    help="queries per engine batch")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="SA shards (0 = one per local device)")
+    ap.add_argument("--pattern", action="append", default=[],
+                    help="comma-separated token pattern; repeatable. "
+                         "When absent, runs the synthetic query load")
+    ap.add_argument("--queries", type=int, default=1000,
+                    help="synthetic-load query count")
+    ap.add_argument("--pattern-len", type=int, default=8,
+                    help="synthetic-load pattern length")
+    ap.add_argument("--hot-fraction", type=float, default=0.25,
+                    help="fraction of synthetic queries drawn from a small "
+                         "hot set (exercises the result cache)")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    import jax
-    import jax.numpy as jnp
     import numpy as np
 
-    from repro.config import get_arch
-    from repro.models.model import Model
-
-    cfg = get_arch(args.arch)
-    model = Model(cfg)
-    params = model.init(jax.random.key(0))
-    print(f"arch={cfg.name} params={model.num_params() / 1e6:.1f}M")
-
-    rng = np.random.default_rng(0)
-    toks = rng.integers(1, cfg.vocab_size, size=(args.batch, args.prompt_len))
-    toks = jnp.asarray(toks.astype(np.int32))
+    from repro.serve.sa_engine import SuffixArrayIndex
 
     t0 = time.perf_counter()
-    logits, cache = model.prefill(params, tokens=toks, max_seq=args.max_seq)
-    print(f"prefill: {time.perf_counter() - t0:.2f}s "
-          f"({args.batch}x{args.prompt_len} tokens)")
+    idx = SuffixArrayIndex.open(
+        args.index_dir,
+        store_backend=args.store_backend,
+        cache_budget_bytes=args.cache_budget,
+        num_shards=args.shards,
+        result_cache_bytes=args.result_cache,
+    )
+    print(f"opened {args.index_dir}: {idx.stats()['suffixes']} suffixes, "
+          f"backend={args.store_backend}, lcp={idx.lcp is not None} "
+          f"({time.perf_counter() - t0:.2f}s)")
 
-    decode = jax.jit(model.decode_step)
-    pos = jnp.full((args.batch,), args.prompt_len, jnp.int32)
-    last = logits[:, -1]
+    if args.pattern:
+        pats = [np.array([int(t) for t in p.split(",") if t != ""], np.int64)
+                for p in args.pattern]
+        counts = idx.count(pats)
+        occs = (idx.align(pats) if not idx.store.text_mode
+                else idx.locate(pats))
+        for p, c, o in zip(pats, counts, occs, strict=True):
+            shown = list(o[:8]) if not isinstance(o, list) else o[:8]
+            more = "" if c <= 8 else f" (+{c - 8} more)"
+            print(f"  pattern {[int(t) for t in p]}: "
+                  f"count={int(c)} at {shown}{more}")
+        return
+
+    # synthetic load: sample patterns out of the corpus (guaranteed hits)
+    # plus a hot set replayed at --hot-fraction
+    rng = np.random.default_rng(args.seed)
+    eng = idx.engine
+    n = int(np.asarray(idx.sa).shape[0])
+    if n == 0:
+        print("empty index; nothing to query")
+        return
+    m = args.pattern_len
+
+    def sample(count):
+        g = np.asarray(idx.sa, np.int64)[rng.integers(0, n, count)]
+        win = idx.store.fetch_windows(g, 0)[:, : min(m, idx.store.k)]
+        out = []
+        for row in win:
+            row = row[row > 0]
+            out.append(row.astype(np.int64) if row.size else
+                       np.array([1], np.int64))
+        return out
+
+    hot = sample(max(1, args.queries // 50))
+    lat = []
+    served = 0
     t0 = time.perf_counter()
-    outs = []
-    for _ in range(args.gen):
-        nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
-        outs.append(np.asarray(nxt))
-        logits_d, cache = decode(params, cache, nxt[:, None], pos)
-        last = logits_d[:, 0]
-        pos = pos + 1
-    dt = time.perf_counter() - t0
-    print(f"decode: {args.gen} steps in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s batched)")
-    print("sample:", np.stack(outs, 1)[0].tolist())
+    while served < args.queries:
+        b = min(args.batch, args.queries - served)
+        batch = sample(b)
+        take = rng.random(b) < args.hot_fraction
+        for i in np.flatnonzero(take):
+            batch[i] = hot[int(rng.integers(0, len(hot)))]
+        t1 = time.perf_counter()
+        idx.count(batch)
+        lat.append((time.perf_counter() - t1) / b)
+        served += b
+    wall = time.perf_counter() - t0
+    lat_us = np.sort(np.array(lat)) * 1e6
+    st = idx.stats()
+    print(f"served {served} queries in {wall:.2f}s "
+          f"({served / wall:.0f} qps, batch={args.batch})")
+    print(f"  per-query latency p50={lat_us[len(lat_us) // 2]:.0f}us "
+          f"p95={lat_us[int(len(lat_us) * 0.95)]:.0f}us")
+    print(f"  cache: {st['cache_hits']} hits / "
+          f"{st['cache_hits'] + st['cache_misses']} lookups; "
+          f"search rounds={st['search_rounds']} "
+          f"compare rounds={st['compare_rounds']}; "
+          f"store requests={st['store_requests']} "
+          f"({st['store_response_bytes']}B)")
+    print(f"  shards={eng.num_shards} lcp_accelerated={st['lcp_accelerated']}")
 
 
 if __name__ == "__main__":

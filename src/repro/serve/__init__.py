@@ -1,3 +1,4 @@
-from repro.serve.engine import ServeEngine, Request
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.sa_engine import ShardedSAEngine, SuffixArrayIndex
 
-__all__ = ["ServeEngine", "Request"]
+__all__ = ["Request", "ServeEngine", "ShardedSAEngine", "SuffixArrayIndex"]

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Deque, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -44,9 +44,11 @@ class ServeEngine:
         self.next_tok = np.zeros(batch_slots, np.int32)
         self._step = jax.jit(model.decode_step)
         self.steps = 0
+        self._submitted: List[Request] = []
 
     def submit(self, req: Request):
         self.queue.append(req)
+        self._submitted.append(req)
 
     def _admit(self):
         for s in range(self.slots):
@@ -91,10 +93,10 @@ class ServeEngine:
         return sum(r is not None for r in self.active)
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
-        finished: List[Request] = []
-        seen: Dict[int, Request] = {}
+        """Step until queue and slots are empty (or max_steps); returns every
+        submitted request that finished, in submission order."""
         for _ in range(max_steps):
             alive = self.step()
             if alive == 0 and not self.queue:
                 break
-        return finished
+        return [r for r in self._submitted if r.done]

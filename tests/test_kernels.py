@@ -91,6 +91,36 @@ def test_merge_path_ranks(n, w, block):
     np.testing.assert_array_equal(got, lex_ranks)
 
 
+@pytest.mark.parametrize("n,k,block", [(1, 4, 8), (100, 8, 32), (700, 6, 256)])
+def test_pattern_cmp(n, k, block):
+    """Masked suffix-vs-pattern compare: kernel vs jnp ref vs numpy brute,
+    over random [start, stop) ranges including empty and full-window ones."""
+    rng = np.random.default_rng(n + k)
+    sfx = rng.integers(0, 5, size=(n, k)).astype(np.int32)
+    pat = rng.integers(0, 5, size=(n, k)).astype(np.int32)
+    # force plenty of equal prefixes so `first` lands mid-range
+    same = rng.random((n, k)) < 0.6
+    pat = np.where(same, sfx, pat)
+    start = rng.integers(0, k, size=(n,)).astype(np.int32)
+    stop = np.minimum(start + rng.integers(0, k + 1, size=(n,)), k).astype(
+        np.int32)
+    got = np.asarray(ops.pattern_cmp(*map(jnp.asarray, (sfx, pat, start, stop)),
+                                     block=block))
+    want = np.asarray(ref.pattern_cmp_ref(*map(jnp.asarray,
+                                               (sfx, pat, start, stop))))
+    np.testing.assert_array_equal(got, want)
+    for i in range(n):
+        s, e = int(start[i]), int(stop[i])
+        m = 0
+        c = 0
+        for j in range(s, e):
+            if sfx[i, j] != pat[i, j]:
+                c = -1 if sfx[i, j] < pat[i, j] else 1
+                break
+            m += 1
+        assert got[i, 0] == c and got[i, 1] == m, (i, s, e)
+
+
 def test_prefix_pack_matches_encoding_records():
     """Kernel output == the canonical map-phase encoding (text mode)."""
     from repro.core import encoding

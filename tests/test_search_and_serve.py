@@ -87,6 +87,26 @@ def test_serve_engine_continuous_batching():
     assert r0.generated == want
 
 
+def test_serve_engine_run_until_drained_returns_finished():
+    cfg = get_arch("tiny-gemma3")
+    model = Model(cfg)
+    params = model.init(jax.random.key(0), dtype=jnp.float32)
+    engine = ServeEngine(model, params, batch_slots=2, max_seq=64)
+    rng = np.random.default_rng(3)
+    reqs = [
+        Request(rid=i, prompt=rng.integers(1, cfg.vocab_size, size=(n,)).tolist(),
+                max_new=4)
+        for i, n in enumerate([3, 5, 2])
+    ]
+    for r in reqs:
+        engine.submit(r)
+    finished = engine.run_until_drained()
+    assert finished == reqs  # all finished, in submission order
+    assert all(r.done and len(r.generated) == 4 for r in finished)
+    # draining again is a no-op but still reports every finished request
+    assert engine.run_until_drained() == reqs
+
+
 def test_serve_engine_eos_stops_early():
     cfg = get_arch("tiny-gemma3")
     model = Model(cfg)
