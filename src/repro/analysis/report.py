@@ -33,7 +33,8 @@ def _mem_gb(r) -> str:
 
 
 def dryrun_table(path="dryrun_results.json") -> str:
-    rs = json.load(open(path))
+    with open(path) as f:
+        rs = json.load(f)
     out = [
         "| arch | shape | mesh | status | per-dev HLO GFLOPs | per-dev GB "
         "accessed | collective MB | args+temps GB |",
@@ -57,7 +58,8 @@ def dryrun_table(path="dryrun_results.json") -> str:
 
 
 def roofline_table(path="corrected_results.json") -> str:
-    rs = [r for r in json.load(open(path)) if r["status"] == "ok"]
+    with open(path) as f:
+        rs = [r for r in json.load(f) if r["status"] == "ok"]
     out = [
         "| arch | shape | compute s | memory s | collective s | bottleneck | "
         "6ND/HLO | roofline frac |",
@@ -76,7 +78,8 @@ def roofline_table(path="corrected_results.json") -> str:
 def perf_table(path="perf_experiments.json") -> str:
     if not os.path.exists(path):
         return "(pending)"
-    rs = json.load(open(path))
+    with open(path) as f:
+        rs = json.load(f)
     out = [
         "| experiment | compute s | memory s | collective s | bottleneck | "
         "roofline frac |",

@@ -390,6 +390,11 @@ class SuperblockConfig:
       LCP) arrays + the serialized corpus (or a pointer to the caller's own
       corpus file).  Requires ``spill_dir``.  ``SuffixArrayIndex.open``
       serves such a directory with no rebuild.
+    ``sanitize``: run the build under the runtime sanitizer
+      (``repro.core.sanitize``): backend accounting cross-checked and a
+      sampled window subset oracle-verified on every fetch, every emitted
+      merge piece order-checked.  Equivalent to ``REPRO_SANITIZE=1``;
+      output is bit-identical to an unsanitized build, only slower.
     """
 
     max_records_per_run: int = 0
@@ -405,6 +410,7 @@ class SuperblockConfig:
     spill_dir: Optional[str] = None
     emit_lcp: bool = False
     write_manifest: bool = False
+    sanitize: bool = False
 
 
 # ---------------------------------------------------------------------------

@@ -32,10 +32,12 @@ from typing import Any, Dict, Optional, Tuple
 import numpy as np
 
 from repro.config import SAConfig, asdict
+from repro.core.sanitize import SanitizingBackend, sanitize_enabled
 from repro.core.store import (
     ChunkedFileBackend,
     InMemoryBackend,
     StoreBackend,
+    stream_backend_items,
 )
 
 MANIFEST_NAME = "manifest.json"
@@ -66,14 +68,21 @@ def _write_array(arr: np.ndarray, path: str) -> None:
 
 
 def _serialize_corpus(backend: StoreBackend, path: str, chunk_items: int = 0) -> None:
-    """Stream the backend's items into a chunked corpus file."""
+    """Stream the backend's items into a chunked corpus file, atomically.
+
+    The stream is written to a sibling temp file and renamed into place only
+    after ``write_chunked_stream`` has back-patched the item count and
+    closed it — a crash mid-serialization can never leave a plausible but
+    truncated ``corpus.sachunk`` for a later ``open_index`` to trust.
+    """
     from repro.data.chunk_store import write_chunked_stream
 
-    def batches():
-        for lo in range(0, backend.n, _SERIALIZE_BATCH):
-            yield backend.read_items(lo, min(lo + _SERIALIZE_BATCH, backend.n))
-
-    write_chunked_stream(batches(), path, chunk_items=chunk_items)
+    tmp = f"{path}.{os.getpid()}.tmp"
+    write_chunked_stream(
+        stream_backend_items(backend, _SERIALIZE_BATCH), tmp,
+        chunk_items=chunk_items,
+    )
+    os.replace(tmp, path)
 
 
 def save_index(
@@ -188,13 +197,13 @@ def open_index(
             corpus_path, cfg, cache_budget_bytes=cache_budget_bytes
         )
     elif store_backend == "memory":
-        from repro.data.chunk_store import ChunkedCorpusReader
+        from repro.data import chunk_store
 
-        with ChunkedCorpusReader(corpus_path) as reader:
-            corpus = reader.read_items(0, reader.meta.items)
-        backend = InMemoryBackend(corpus, cfg)
+        backend = InMemoryBackend(chunk_store.load_corpus(corpus_path), cfg)
     else:
         raise ValueError(f"unknown store backend {store_backend!r}")
+    if sanitize_enabled():
+        backend = SanitizingBackend(backend)
 
     sa = np.load(os.path.join(index_dir, SA_FILE), mmap_mode="r")
     lcp = None

@@ -15,6 +15,7 @@ that build a transient in-memory store per call.
 """
 from __future__ import annotations
 
+import warnings
 from typing import List, Tuple
 
 import numpy as np
@@ -158,20 +159,32 @@ def _wrapper_store(corpus: np.ndarray) -> CorpusStore:
                        SAConfig(vocab_size=max(vocab, 1)))
 
 
+def _warn_deprecated(name: str, alt: str) -> None:
+    # stacklevel=3: _warn_deprecated -> wrapper -> the caller's frame
+    warnings.warn(
+        f"{name} is deprecated: it rebuilds a transient in-memory store per "
+        f"call (accounting-invisible, O(corpus) per query). Use {alt} or "
+        f"SuffixArrayIndex instead.",
+        DeprecationWarning, stacklevel=3)
+
+
 def search_text(text: np.ndarray, sa: np.ndarray, pattern) -> Tuple[int, int]:
     """Deprecated: use :func:`search_store` (or ``SuffixArrayIndex``)."""
+    _warn_deprecated("search_text", "search_store")
     return search_store(_wrapper_store(np.asarray(text)), sa, pattern)
 
 
 def count_occurrences(text: np.ndarray, sa: np.ndarray, pattern) -> int:
     """Deprecated: use :func:`count_store` (or ``SuffixArrayIndex``)."""
-    lo, hi = search_text(text, sa, pattern)
+    _warn_deprecated("count_occurrences", "count_store")
+    lo, hi = search_store(_wrapper_store(np.asarray(text)), sa, pattern)
     return hi - lo
 
 
 def find_occurrences(text: np.ndarray, sa: np.ndarray, pattern) -> List[int]:
     """Deprecated: use :func:`locate_store` (or ``SuffixArrayIndex``)."""
-    lo, hi = search_text(text, sa, pattern)
+    _warn_deprecated("find_occurrences", "locate_store")
+    lo, hi = search_store(_wrapper_store(np.asarray(text)), sa, pattern)
     return sorted(int(p) for p in np.asarray(sa)[lo:hi])
 
 
@@ -188,6 +201,7 @@ def align_reads(
     ``stride_bits`` packing is translated to the store's own when they
     differ, so pre-existing SAs keep working unchanged.
     """
+    _warn_deprecated("align_reads", "search_store over a reads-mode store")
     reads = np.asarray(reads, np.int32)
     store = _wrapper_store(reads)
     sa = np.asarray(sa_gidx, np.int64)

@@ -19,7 +19,7 @@ from __future__ import annotations
 import math
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Iterator, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -373,7 +373,7 @@ class StoreBackend:
     def read_items(self, lo: int, hi: int) -> np.ndarray:
         raise NotImplementedError
 
-    def close(self) -> None:  # noqa: B027 — optional hook, default no-op
+    def close(self) -> None:  # optional hook, default no-op
         pass
 
 
@@ -567,6 +567,10 @@ class CorpusStore:
         # store-layer residency: backend cache + cursor frontier
         self.frontier_bytes = 0
         self.peak_resident_bytes = 0
+        # per-superblock staging (contiguous item ranges; separate counters
+        # because staged blocks are transient build input, not merge traffic)
+        self.staged_items = 0
+        self.staged_bytes = 0
         self._note_resident()
 
     @property
@@ -586,6 +590,23 @@ class CorpusStore:
         self.frontier_bytes += delta_bytes
         if delta_bytes > 0:
             self._note_resident()
+
+    # -- per-superblock staging --------------------------------------------
+    def stage_items(self, lo: int, hi: int) -> np.ndarray:
+        """Materialize the contiguous item range ``[lo, hi)`` for in-core
+        superblock construction.
+
+        The accounted front door for block staging: backends stream the range
+        without touching their window cache (``ChunkedFileBackend`` preads
+        straight from disk), and the store records the staged volume in
+        ``staged_items`` / ``staged_bytes`` — separate from the merge's
+        request/response counters, which measure only cross-superblock window
+        traffic (the paper's "indexes move, raw data stays put" quantity).
+        """
+        out = self.backend.read_items(lo, hi)
+        self.staged_items += int(hi - lo)
+        self.staged_bytes += int(out.nbytes)
+        return out
 
     # -- raw gather ---------------------------------------------------------
     def _gather(self, gidx: np.ndarray, depth: np.ndarray) -> np.ndarray:
@@ -810,3 +831,38 @@ class WindowCursor:
             if ended:
                 return a < b
         raise RuntimeError("suffix comparison overran the window bound")
+
+
+# ---------------------------------------------------------------------------
+# Store-layer backend access helpers (the only sanctioned raw-read paths
+# outside a CorpusStore; everything else is a salint SAL002 violation)
+# ---------------------------------------------------------------------------
+
+
+def stream_backend_items(backend: StoreBackend,
+                         batch_items: int = 1 << 18) -> Iterator[np.ndarray]:
+    """Yield the backend's items in order as bounded batches.
+
+    Serialization/export paths use this instead of raw ``read_items`` calls
+    so no corpus-sized host array ever exists: each yielded batch is at most
+    ``batch_items`` items and the caller is expected to consume it before
+    the next is read.
+    """
+    batch_items = max(1, int(batch_items))
+    for lo in range(0, backend.n, batch_items):
+        yield backend.read_items(lo, min(lo + batch_items, backend.n))
+
+
+def materialize_backend(backend: StoreBackend) -> np.ndarray:
+    """Whole-corpus host materialization (explicitly *not* streaming).
+
+    The sanctioned escape hatch for paths that genuinely need the full
+    corpus host-resident — e.g. converting a disk-chunked corpus to an
+    in-memory reference build for oracle comparison.  Callers on bounded-
+    residency paths must use :func:`stream_backend_items` or
+    :meth:`CorpusStore.stage_items` instead.
+    """
+    if backend.n == 0:
+        shape = (0,) if backend.text_mode else (0, backend.row_len)
+        return np.zeros(shape, np.int32)
+    return np.concatenate(list(stream_backend_items(backend)), axis=0)

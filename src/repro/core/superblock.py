@@ -67,6 +67,13 @@ import numpy as np
 from repro.config import SAConfig, SuperblockConfig
 from repro.core.lcp import lcp_from_sa, pairwise_lcp
 from repro.core.pipeline import DeviceRefiner, build_suffix_array
+from repro.core.sanitize import (
+    SanitizingBackend,
+    SanitizingSink,
+    check_footprint,
+    sanitize_enabled,
+    unwrap_backend,
+)
 from repro.core.store import (
     DEFAULT_CACHE_BUDGET,
     ChunkedFileBackend,
@@ -74,6 +81,7 @@ from repro.core.store import (
     InMemoryBackend,
     StoreBackend,
     WindowCursor,
+    materialize_backend,
 )
 from repro.core.types import WORD_BITS, WORD_MOD, Footprint, SAResult
 
@@ -631,7 +639,7 @@ def _merge_runs(
     pos = (np.arange(take, dtype=np.int64) * total) // take
     # evenly spaced picks over the concatenated runs = per-run quantiles;
     # regroup them per run so each pick subsequence is itself a sorted run.
-    bounds = np.cumsum([0] + [r.size for r in runs])
+    bounds = np.cumsum([0, *(r.size for r in runs)])
     pool_runs = []
     for ri, run in enumerate(runs):
         sel = pos[(pos >= bounds[ri]) & (pos < bounds[ri + 1])] - bounds[ri]
@@ -965,7 +973,7 @@ def _merge_path_runs(
             fetch = np.flatnonzero(amb & ~cand_ended & (cand_levels <= level))
             if fetch.size:
                 keys, ended = store.fetch_keys(cand_gidx[fetch], level)
-                bounds = np.cumsum([0] + [t.buffered for t in live])
+                bounds = np.cumsum([0, *(t.buffered for t in live)])
                 t_of = np.searchsorted(bounds, fetch, side="right") - 1
                 for ti, t in enumerate(live):
                     sel = fetch[t_of == ti]
@@ -1000,7 +1008,7 @@ def _merge_path_runs(
             ranks = store.rank_windows(cand_words, cand_gidx)
 
         # ---- emit everything below the safety horizon ---------------------
-        bounds = np.cumsum([0] + [t.buffered for t in live])
+        bounds = np.cumsum([0, *(t.buffered for t in live)])
         emit_cnt = c
         for ti, t in enumerate(live):
             if t.remaining > t.buffered:  # partially buffered run
@@ -1093,14 +1101,18 @@ def build_suffix_array_superblock(
         os.makedirs(sb.spill_dir, exist_ok=True)
     scratch = _Scratch(sb.spill_dir) if needs_scratch else None
     backend: Optional[StoreBackend] = None
+    owns_backend = True
     try:
         backend = _resolve_backend(corpus, cfg, sb, scratch)
+        owns_backend = backend is not corpus  # decided before any wrapping
+        if sanitize_enabled(sb):
+            backend = SanitizingBackend(backend)
         return _build_superblock(
             backend, lengths, cfg, sb, mesh, scratch,
             original_corpus=corpus,
         )
     finally:
-        if backend is not None and backend is not corpus:
+        if backend is not None and owns_backend:
             backend.close()
         if scratch is not None:
             scratch.cleanup()
@@ -1122,16 +1134,16 @@ def _build_superblock(
         )
     plan = plan_superblocks(backend.shape, cfg, sb)
     if plan.num_superblocks <= 1:
+        store = CorpusStore(None, cfg, backend=backend,
+                            request_capacity=sb.request_capacity)
         res = build_suffix_array(
-            backend.read_items(0, backend.n), lengths=lengths, cfg=cfg,
+            store.stage_items(0, backend.n), lengths=lengths, cfg=cfg,
             mesh=mesh,
         )
         # single-pass builds have no ordered emission to piggyback on: the
         # LCP is recomputed post-hoc from the finished SA, and the index
         # directory (when asked for) is written wholesale.
         if sb.emit_lcp and res.lcp is None:
-            store = CorpusStore(None, cfg, backend=backend,
-                                request_capacity=sb.request_capacity)
             res.lcp = lcp_from_sa(store, res.suffix_array)
             res.stats["emit_lcp"] = True
         if sb.write_manifest:
@@ -1141,7 +1153,7 @@ def _build_superblock(
         raise ValueError(f"unknown merge_backend: {sb.merge_backend!r}")
     if sb.merge_algorithm not in ("merge_path", "kway", "rerank"):
         raise ValueError(f"unknown merge_algorithm: {sb.merge_algorithm!r}")
-    streaming = not isinstance(backend, InMemoryBackend)
+    streaming = not isinstance(unwrap_backend(backend), InMemoryBackend)
     if streaming and sb.merge_backend == "device":
         raise ValueError(
             "merge_backend='device' needs the corpus HBM-resident; "
@@ -1189,7 +1201,7 @@ def _build_superblock(
     )
     block_stats = []
     for lo, hi in plan.blocks:
-        block = backend.read_items(lo, hi)  # transient staging, not cached
+        block = store.stage_items(lo, hi)  # transient staging, not cached
         if plan.text_mode:
             res = build_suffix_array(block, cfg=cfg, mesh=mesh)
             sa_b = res.suffix_array + lo
@@ -1230,6 +1242,11 @@ def _build_superblock(
             lcp_path = os.path.join(sb.spill_dir, "lcp.npy")
     sink = _OutputSink(total_suffixes, memmap_path=out_path,
                        lcp_path=lcp_path, pair_lcp=pair_lcp)
+    if sanitize_enabled(sb):
+        # order-verify emitted pieces through a private audit store: the
+        # build store's traffic counters (gated by benchmarks) stay clean.
+        sink = SanitizingSink(sink, backend, cfg,
+                              request_capacity=sb.request_capacity)
     peak_candidates = 0
 
     cur = WindowCursor(store)
@@ -1237,7 +1254,7 @@ def _build_superblock(
     if sb.merge_backend == "device":
         refiner = DeviceRefiner(
             original_corpus if isinstance(original_corpus, np.ndarray)
-            else backend.read_items(0, backend.n),
+            else store.stage_items(0, backend.n),
             cfg, lengths=lengths, mesh=mesh,
         )
         refine = refiner.refine
@@ -1326,6 +1343,8 @@ def _build_superblock(
             for p in risk_pieces:
                 sink.append(p)
     sa = sink.result()
+    if sanitize_enabled(sb):
+        check_footprint(store, backend)
 
     dev_req = refiner.requests if refiner else 0
     dev_req_bytes = refiner.request_bytes if refiner else 0
@@ -1373,6 +1392,7 @@ def _build_superblock(
         "spilled_runs": scratch.spilled_runs if scratch else 0,
         "spilled_bytes": scratch.spilled_bytes if scratch else 0,
         "emit_lcp": bool(sb.emit_lcp),
+        "sanitized": sanitize_enabled(sb),
     }
     res = SAResult(suffix_array=sa, footprint=fp, stats=stats, lcp=sink.lcp)
     if sb.write_manifest:
@@ -1441,10 +1461,9 @@ def _materialize_corpus(corpus, cfg: SAConfig) -> np.ndarray:
     """Whole-corpus host materialization for the single-pass fallback (a
     plan that fits one run is in-core by definition)."""
     if isinstance(corpus, StoreBackend):
-        return np.asarray(corpus.read_items(0, corpus.n), np.int32)
+        return np.asarray(materialize_backend(corpus), np.int32)
     if isinstance(corpus, (str, os.PathLike)):
-        from repro.data.chunk_store import ChunkedCorpusReader
+        from repro.data import chunk_store
 
-        with ChunkedCorpusReader(os.fspath(corpus)) as r:
-            return r.read_items(0, r.meta.items)
+        return chunk_store.load_corpus(os.fspath(corpus))
     return np.asarray(corpus, np.int32)

@@ -18,6 +18,7 @@ tokens, zero-padded past the corpus end).
 """
 from __future__ import annotations
 
+import contextlib
 import os
 import struct
 from dataclasses import dataclass
@@ -161,10 +162,8 @@ def write_chunked_stream(batches, path: str,
     except BaseException:
         # never leave a valid-looking file with the placeholder items=0
         # header: a later reader would silently see an empty corpus.
-        try:
+        with contextlib.suppress(OSError):
             os.unlink(path)
-        except OSError:
-            pass
         raise
     return ChunkedCorpusMeta(text_mode=text_mode, items=items,
                              row_len=row_len, chunk_items=chunk_items)
@@ -246,3 +245,14 @@ class ChunkedCorpusReader:
         if halo:
             raise ValueError("halo is a text-mode concept (rows are atomic)")
         return self.read_items(lo, hi)
+
+
+def load_corpus(path: str) -> np.ndarray:
+    """Materialize a whole chunked corpus file as one host array.
+
+    The store-layer front door for whole-file loads (salint SAL002 bans raw
+    ``read_items`` calls elsewhere): opens, reads, and closes the reader in
+    one scope, so callers cannot leak the fd.
+    """
+    with ChunkedCorpusReader(path) as r:
+        return r.read_items(0, r.meta.items)

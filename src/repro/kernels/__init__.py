@@ -1,3 +1,52 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels: one module per kernel, each paired with a bit-exact ref.
+
+``KERNEL_REGISTRY`` is the machine-checked pairing (salint rule SAL001):
+every kernel module in this package must be registered here with its public
+dispatch op (``repro.kernels.ops``) and its reference oracle
+(``repro.kernels.ref``), and every registered kernel must be exercised by
+the ``tests/test_kernels.py`` sweep.  An unregistered kernel module — or a
+registry entry whose reference does not exist — fails
+``python -m tools.salint`` and the registry sweep test.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, List, NamedTuple
+
+
+class KernelSpec(NamedTuple):
+    """One Pallas kernel's registration."""
+
+    module: str  # kernel module basename under repro/kernels/
+    op: str  # public dispatch callable in repro.kernels.ops
+    ref: str  # bit-exact oracle callable in repro.kernels.ref
+
+
+# Keys are kernel module basenames.  salint SAL001 statically checks that
+# this dict covers every kernel module on disk, that each ``ref`` is defined
+# in kernels/ref.py, and that tests/test_kernels.py sweeps the registry.
+KERNEL_REGISTRY: Dict[str, KernelSpec] = {
+    "prefix_pack": KernelSpec("prefix_pack", "prefix_pack", "prefix_pack_ref"),
+    "window_gather": KernelSpec(
+        "window_gather", "window_gather", "window_gather_ref"),
+    "bucket_hist": KernelSpec("bucket_hist", "bucket_hist", "bucket_hist_ref"),
+    "bitonic_sort": KernelSpec(
+        "bitonic_sort", "bitonic_sort_tiles", "bitonic_sort_tiles_ref"),
+    "merge_path": KernelSpec(
+        "merge_path", "merge_path_ranks", "merge_path_ranks_ref"),
+    "pattern_cmp": KernelSpec("pattern_cmp", "pattern_cmp", "pattern_cmp_ref"),
+}
+
+# Support modules that are not kernels themselves: the jit'd dispatch layer,
+# the reference oracles, the jax-version compat shims, and this registry.
+SUPPORT_MODULES = frozenset({"__init__", "ops", "ref", "compat"})
+
+
+def kernel_modules() -> List[str]:
+    """Kernel module basenames present on disk (registry ground truth)."""
+    here = os.path.dirname(__file__)
+    return sorted(
+        f[:-3]
+        for f in os.listdir(here)
+        if f.endswith(".py") and f[:-3] not in SUPPORT_MODULES
+    )

@@ -16,6 +16,7 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --sa   # SA-pipeline dry-run
 """
 import argparse
+import contextlib
 import json
 import sys
 import time
@@ -103,7 +104,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, record_hlo: bool = Tru
         collective=coll,
         model_flops_total=rl.model_flops(cfg, shape),
     ).finish()
-    try:
+    with contextlib.suppress(Exception):
         peak = getattr(mem, "peak_memory_in_bytes", None)
         if peak is None:
             peak = (
@@ -112,8 +113,6 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, record_hlo: bool = Tru
                 + getattr(mem, "temp_size_in_bytes", 0)
             )
         rec.peak_memory_bytes = float(peak)
-    except Exception:
-        pass
 
     out = rec.to_dict()
     out.update(

@@ -98,7 +98,8 @@ def main():
     names = args.exp or (list(EXPERIMENTS) if args.all else [])
     results = []
     if os.path.exists(args.out):
-        results = json.load(open(args.out))
+        with open(args.out) as f:
+            results = json.load(f)
     done = {r["exp"] for r in results}
 
     for name in names:

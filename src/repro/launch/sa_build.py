@@ -149,10 +149,9 @@ def main():
 
     if args.mode in ("terasort", "doubling") and corpus is None:
         # these modes are in-core only: materialize the existing corpus file
-        from repro.data.chunk_store import ChunkedCorpusReader
+        from repro.data import chunk_store
 
-        with ChunkedCorpusReader(args.corpus_file) as r:
-            corpus = r.read_items(0, r.meta.items)
+        corpus = chunk_store.load_corpus(args.corpus_file)
 
     t0 = time.perf_counter()
     if args.mode == "terasort":

@@ -596,10 +596,16 @@ class SuffixArrayIndex:
 def _serving_backend(corpus, cfg: SAConfig,
                      sb: SuperblockConfig) -> StoreBackend:
     """Backend for querying a freshly built, non-persisted index."""
+    from repro.core.sanitize import SanitizingBackend, sanitize_enabled
+
     if isinstance(corpus, StoreBackend):
-        return corpus
-    if isinstance(corpus, (str, os.PathLike)):
-        return ChunkedFileBackend(
+        backend = corpus
+    elif isinstance(corpus, (str, os.PathLike)):
+        backend = ChunkedFileBackend(
             os.fspath(corpus), cfg,
             cache_budget_bytes=max(sb.cache_budget_bytes, 0))
-    return InMemoryBackend(np.asarray(corpus, np.int32), cfg)
+    else:
+        backend = InMemoryBackend(np.asarray(corpus, np.int32), cfg)
+    if sanitize_enabled(sb) and not isinstance(backend, SanitizingBackend):
+        backend = SanitizingBackend(backend)
+    return backend

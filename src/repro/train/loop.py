@@ -1,4 +1,4 @@
-"""Production training loop: checkpoint/restart, fault retry, straggler
+r"""Production training loop: checkpoint/restart, fault retry, straggler
 monitoring, deterministic data, preemption hook.
 
 The loop is a transaction machine:

@@ -13,6 +13,10 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# salint's fixture corpus contains deliberately-broken test_*.py trees; they
+# are checked by tests/test_salint.py, never collected directly.
+collect_ignore = ["salint_fixtures"]
+
 
 @pytest.fixture(scope="session")
 def run_multidev():

@@ -1,0 +1,5 @@
+"""BAD mini kernel package: one unregistered module, one phantom ref."""
+
+KERNEL_REGISTRY = {
+    "toy_sort": ("toy_sort", "toy_sort", "missing_ref"),
+}

@@ -1,0 +1,2 @@
+def rotten_kernel(x):
+    return x  # unregistered kernel module: SAL001

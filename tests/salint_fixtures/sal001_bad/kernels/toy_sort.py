@@ -1,0 +1,2 @@
+def toy_sort_kernel(x):
+    return sorted(x)

@@ -1,0 +1,2 @@
+def test_nothing():
+    pass  # no registry sweep here: SAL001

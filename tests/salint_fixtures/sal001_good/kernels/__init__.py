@@ -1,0 +1,5 @@
+"""GOOD mini kernel package: registry covers disk, refs exist."""
+
+KERNEL_REGISTRY = {
+    "toy_sort": ("toy_sort", "toy_sort", "toy_sort_ref"),
+}

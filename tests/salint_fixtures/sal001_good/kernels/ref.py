@@ -1,0 +1,2 @@
+def toy_sort_ref(x):
+    return sorted(x)

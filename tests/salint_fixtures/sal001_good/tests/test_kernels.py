@@ -1,0 +1,5 @@
+from kernels import KERNEL_REGISTRY
+
+
+def test_sweep():
+    assert KERNEL_REGISTRY

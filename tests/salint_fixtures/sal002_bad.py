@@ -1,0 +1,14 @@
+"""BAD: raw backend data reads outside the store layer (SAL002 x3)."""
+
+
+def stage_block(backend, lo, hi):
+    return backend.read_items(lo, hi)  # line 5: SAL002
+
+
+def peek_chunk(backend):
+    chunk = backend.read_chunk(0, halo=4)  # line 9: SAL002
+    return chunk
+
+
+def raw_windows(backend, gidx, depth):
+    return backend.gather(gidx, depth)  # line 14: SAL002

@@ -1,0 +1,17 @@
+"""GOOD: all corpus reads routed through the accounted store APIs."""
+
+
+def stage_block(store, lo, hi):
+    return store.stage_items(lo, hi)
+
+
+def windows(store, gidx, depth):
+    return store.fetch_windows(gidx, depth)
+
+
+class MyBackend:
+    def read_items(self, lo, hi):
+        return self._do_read(lo, hi)
+
+    def double_read(self, lo, hi):
+        return self.read_items(lo, hi)  # self-call: a backend's own method

@@ -1,0 +1,11 @@
+"""BAD: host materialization inside an out-of-core merge function."""
+import jax
+import numpy as np
+
+
+def _kway_merge(store, runs):
+    heads = [r[0] for r in runs]
+    listed = np.asarray(heads, dtype=np.int64).tolist()  # line 8: SAL003 x2
+    copied = np.array(store.fetch_windows(heads, 0))  # line 9: SAL003
+    pulled = jax.device_get(copied)  # line 10: SAL003
+    return listed, pulled

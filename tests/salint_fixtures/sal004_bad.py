@@ -1,0 +1,11 @@
+"""BAD: frozen-config mutation outside __post_init__ (SAL004 x2)."""
+
+
+def widen_budget(cfg, budget):
+    object.__setattr__(cfg, "cache_budget_bytes", budget)  # line 5: SAL004
+    return cfg
+
+
+class Tuner:
+    def tune(self, cfg):
+        object.__setattr__(cfg, "merge_tile", 512)  # line 11: SAL004

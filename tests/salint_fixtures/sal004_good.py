@@ -1,0 +1,14 @@
+"""GOOD: derived fields set in __post_init__; callers use replace()."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Cfg:
+    budget: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "budget", max(0, self.budget))
+
+
+def widen_budget(cfg, budget):
+    return dataclasses.replace(cfg, budget=budget)

@@ -1,0 +1,16 @@
+"""BAD: unowned file handles and memmaps (SAL005 x3)."""
+import json
+
+import numpy as np
+
+
+def load_stats(path):
+    return json.load(open(path))  # line 8: SAL005
+
+
+def open_sa(path):
+    return np.load(path, mmap_mode="r")  # line 12: SAL005
+
+
+def scratch_map(path, n):
+    return np.memmap(path, dtype=np.int64, mode="w+", shape=(n,))  # SAL005

@@ -1,0 +1,20 @@
+"""GOOD: handles context-managed or owned by an audited owner class."""
+import json
+
+import numpy as np
+
+
+def load_stats(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def load_sa(path):
+    return np.load(path)  # no mmap_mode: plain read, no handle retained
+
+
+class _Scratch:
+    def spill(self, path, n):
+        # audited owner: _Scratch's lifecycle closes what it opens
+        self._map = np.memmap(path, dtype=np.int64, mode="w+", shape=(n,))
+        return self._map

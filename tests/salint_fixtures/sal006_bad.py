@@ -1,0 +1,16 @@
+"""BAD: shimmed jax APIs called directly (SAL006 x4)."""
+import jax
+from jax import lax
+from jax.experimental.shard_map import shard_map  # line 4: SAL006
+
+
+def axis_count(name):
+    return lax.axis_size(name)  # line 8: SAL006
+
+
+def broadcast(x, name):
+    return lax.pvary(x, name)  # line 12: SAL006
+
+
+def out_spec(shape):
+    return jax.ShapeDtypeStruct(shape, "int32", vma=frozenset())  # SAL006

@@ -1,0 +1,22 @@
+"""GOOD: version-probed shims used instead of raw jax APIs."""
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributed import axis_size, pvary, shard_map
+from repro.kernels.compat import out_struct
+
+
+def axis_count(name):
+    return axis_size(name)
+
+
+def broadcast(x, name):
+    return pvary(x, name)
+
+
+def out_spec(shape, mesh, spec):
+    return out_struct(shape, jnp.int32, mesh, spec)
+
+
+def unrelated_jax_is_fine(x):
+    return jax.jit(lambda v: v + 1)(x)

@@ -1,0 +1,7 @@
+"""BAD: internal callers of the deprecated raw-array wrappers (SAL007 x2)."""
+from repro.core.search import count_occurrences, search_text
+
+
+def query(text, sa, pattern):
+    lo, hi = search_text(text, sa, pattern)  # line 6: SAL007
+    return count_occurrences(text, sa, pattern), (lo, hi)  # line 7: SAL007

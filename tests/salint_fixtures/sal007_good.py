@@ -1,0 +1,7 @@
+"""GOOD: internal code queries through the store-served API."""
+from repro.core.search import count_store, search_store
+
+
+def query(store, sa, pattern):
+    lo, hi = search_store(store, sa, pattern)
+    return count_store(store, sa, pattern), (lo, hi)

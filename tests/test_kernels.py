@@ -148,3 +148,31 @@ def test_pipeline_with_pallas_kernels_matches_oracle():
     text = rng.integers(1, 5, size=(200,)).astype(np.int32)
     res = build_suffix_array(text, cfg=cfg)
     np.testing.assert_array_equal(res.suffix_array, doubling_sa_text(text))
+
+
+# ---------------------------------------------------------------------------
+# kernel registry sweep (salint SAL001's runtime counterpart)
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_registry_covers_disk_modules():
+    """Every kernel module on disk is registered, and nothing phantom is."""
+    from repro.kernels import KERNEL_REGISTRY, kernel_modules
+
+    assert sorted(KERNEL_REGISTRY) == kernel_modules()
+
+
+@pytest.mark.parametrize(
+    "name", sorted(__import__("repro.kernels", fromlist=["x"]).KERNEL_REGISTRY))
+def test_kernel_registry_sweep(name):
+    """Registry sweep: each entry's op and ref resolve to callables and the
+    module itself imports (a registered kernel cannot silently rot)."""
+    import importlib
+
+    from repro.kernels import KERNEL_REGISTRY
+
+    spec = KERNEL_REGISTRY[name]
+    assert spec.module == name
+    importlib.import_module(f"repro.kernels.{spec.module}")
+    assert callable(getattr(ops, spec.op)), spec.op
+    assert callable(getattr(ref, spec.ref)), spec.ref

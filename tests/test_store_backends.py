@@ -7,7 +7,11 @@ property, via the compat shim) — while its LRU cache never exceeds the
 resident-byte budget; plus the ``WindowCursor`` eviction paths
 (``release``/``release_all``/``offer``) and the chunked on-disk format
 roundtrip.
+
+This file's *purpose* is exercising raw backend reads, so the SAL002
+backend-encapsulation rule is suppressed file-wide.
 """
+# salint: disable-file=SAL002
 import os
 import shutil
 import tempfile

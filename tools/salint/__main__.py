@@ -1,0 +1,60 @@
+"""CLI: ``python -m tools.salint [paths ...] [--explain SALxxx]``."""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from tools.salint.engine import run
+from tools.salint.rules import DEFAULT_RULES
+
+DEFAULT_PATHS = ["src", "tests", "benchmarks"]
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.salint",
+        description="Static analyzer for the repo's residency/kernel "
+                    "invariants (rules SAL001-SAL007).",
+    )
+    parser.add_argument(
+        "paths", nargs="*", default=None,
+        help=f"files or directories to scan (default: {DEFAULT_PATHS})")
+    parser.add_argument(
+        "--explain", metavar="SALxxx",
+        help="print the rationale for one rule and exit")
+    parser.add_argument(
+        "--list-rules", action="store_true",
+        help="list rule IDs and summaries and exit")
+    args = parser.parse_args(argv)
+
+    if args.explain:
+        rid = args.explain.strip().upper()
+        for rule in DEFAULT_RULES:
+            if rule.rule_id == rid:
+                print(f"{rule.rule_id}: {rule.summary}")
+                print()
+                print(rule.rationale)
+                return 0
+        print(f"unknown rule id: {rid}", file=sys.stderr)
+        return 2
+
+    if args.list_rules:
+        for rule in DEFAULT_RULES:
+            print(f"{rule.rule_id}  {rule.summary}")
+        return 0
+
+    paths = args.paths or DEFAULT_PATHS
+    violations = run(paths, DEFAULT_RULES)
+    for v in violations:
+        print(v.format())
+    if violations:
+        print(f"\n{len(violations)} violation(s). "
+              f"'python -m tools.salint --explain <ID>' for rationale.",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,207 @@
+"""salint engine: file discovery, AST parsing, suppression, reporting.
+
+The analyzer is stdlib-``ast`` based and rule-driven: each rule is a class
+with an ID (``SALxxx``), a one-line summary, a rationale paragraph (served
+by ``--explain``), and a ``check`` that yields :class:`Violation` spans.
+Rules come in two shapes:
+
+* per-file rules — ``check(ctx)`` over one parsed file;
+* repo rules — ``repo_level = True``, ``check_repo(root)`` over repository
+  structure (SAL001's kernel-registry pairing).
+
+Suppression is explicit and grep-able:
+
+* ``# salint: disable=SAL002`` trailing a line (or alone on the previous
+  line) suppresses the listed rule IDs for that line;
+* ``# salint: disable-file=SAL002`` anywhere in a file suppresses the rule
+  for the whole file (reserved for files whose *purpose* is to exercise the
+  guarded API, e.g. the store-backend unit tests).
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set
+
+# Directories never scanned: fixture snippets are deliberate violations the
+# test suite loads explicitly, and caches/VCS internals are not source.
+EXCLUDED_DIRS = {"__pycache__", ".git", "salint_fixtures", ".ruff_cache"}
+
+_LINE_RE = re.compile(r"#\s*salint:\s*disable=([A-Z0-9,\s]+)")
+_FILE_RE = re.compile(r"#\s*salint:\s*disable-file=([A-Z0-9,\s]+)")
+
+
+@dataclass(frozen=True)
+class Violation:
+    """One rule hit, with a precise source span (1-based line, 0-based col,
+    matching ``ast`` node locations)."""
+
+    rule_id: str
+    path: str
+    line: int
+    col: int
+    end_line: int
+    end_col: int
+    message: str
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col + 1}: "
+                f"{self.rule_id} {self.message}")
+
+
+def violation_at(rule_id: str, path: str, node: ast.AST, message: str) -> Violation:
+    return Violation(
+        rule_id=rule_id,
+        path=path,
+        line=getattr(node, "lineno", 1),
+        col=getattr(node, "col_offset", 0),
+        end_line=getattr(node, "end_lineno", getattr(node, "lineno", 1)),
+        end_col=getattr(node, "end_col_offset", getattr(node, "col_offset", 0)),
+        message=message,
+    )
+
+
+class Suppressions:
+    """Per-file suppression state parsed from the raw source."""
+
+    def __init__(self, source: str):
+        self.file_level: Set[str] = set()
+        self.by_line: Dict[int, Set[str]] = {}
+        for i, text in enumerate(source.splitlines(), start=1):
+            m = _FILE_RE.search(text)
+            if m:
+                self.file_level |= _split_ids(m.group(1))
+                continue
+            m = _LINE_RE.search(text)
+            if m:
+                ids = _split_ids(m.group(1))
+                target = i
+                # a comment-only line applies to the next line
+                if text.lstrip().startswith("#"):
+                    target = i + 1
+                self.by_line.setdefault(target, set()).update(ids)
+
+    def is_suppressed(self, v: Violation) -> bool:
+        if v.rule_id in self.file_level or "ALL" in self.file_level:
+            return True
+        ids = self.by_line.get(v.line, ())
+        return v.rule_id in ids or "ALL" in ids
+
+
+def _split_ids(raw: str) -> Set[str]:
+    return {tok.strip().upper() for tok in raw.split(",") if tok.strip()}
+
+
+@dataclass
+class FileContext:
+    """Everything a per-file rule sees for one source file."""
+
+    path: str  # path as reported (relative to the scan root when possible)
+    tree: ast.Module
+    source: str
+
+    @property
+    def basename(self) -> str:
+        return os.path.basename(self.path)
+
+    @property
+    def posix_path(self) -> str:
+        return self.path.replace(os.sep, "/")
+
+    def endswith(self, *suffixes: str) -> bool:
+        return any(self.posix_path.endswith(s) for s in suffixes)
+
+    def in_dir(self, name: str) -> bool:
+        return name in self.posix_path.split("/")[:-1]
+
+
+class Rule:
+    """Base rule: subclass, set the metadata, implement ``check``."""
+
+    rule_id = "SAL000"
+    summary = ""
+    rationale = ""
+    repo_level = False
+
+    def check(self, ctx: FileContext) -> Iterator[Violation]:
+        return iter(())
+
+    def check_repo(self, root: str) -> Iterator[Violation]:
+        return iter(())
+
+
+def iter_py_files(paths: Sequence[str]) -> Iterator[str]:
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                yield p
+            continue
+        for dirpath, dirnames, filenames in os.walk(p):
+            dirnames[:] = sorted(
+                d for d in dirnames
+                if d not in EXCLUDED_DIRS and not d.startswith(".")
+            )
+            for f in sorted(filenames):
+                if f.endswith(".py"):
+                    yield os.path.join(dirpath, f)
+
+
+def check_file(path: str, rules: Iterable[Rule],
+               source: Optional[str] = None) -> List[Violation]:
+    """Run per-file rules over one file, suppressions applied."""
+    if source is None:
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Violation("SAL000", path, e.lineno or 1, (e.offset or 1) - 1,
+                          e.lineno or 1, e.offset or 1,
+                          f"syntax error: {e.msg}")]
+    ctx = FileContext(path=path, tree=tree, source=source)
+    sup = Suppressions(source)
+    out = []
+    for rule in rules:
+        if rule.repo_level:
+            continue
+        for v in rule.check(ctx):
+            if not sup.is_suppressed(v):
+                out.append(v)
+    # ast.walk is breadth-first: restore source order for stable reporting
+    out.sort(key=lambda v: (v.line, v.col, v.rule_id))
+    return out
+
+
+def run(paths: Sequence[str], rules: Iterable[Rule],
+        root: Optional[str] = None) -> List[Violation]:
+    """Scan ``paths``; returns all unsuppressed violations, sorted."""
+    root = root or os.getcwd()
+    violations: List[Violation] = []
+    scanned = list(iter_py_files(paths))
+    for path in scanned:
+        violations.extend(check_file(path, rules))
+    # repo rules fire once, when the scan actually covers repo source
+    # (a fixtures-only invocation from the tests must not drag them in)
+    covers_src = any(
+        "repro" in p.replace(os.sep, "/").split("/") for p in scanned
+    )
+    if covers_src:
+        for rule in rules:
+            if not rule.repo_level:
+                continue
+            for v in rule.check_repo(root):
+                sup = _suppressions_for(v.path)
+                if sup is None or not sup.is_suppressed(v):
+                    violations.append(v)
+    violations.sort(key=lambda v: (v.path, v.line, v.col, v.rule_id))
+    return violations
+
+
+def _suppressions_for(path: str) -> Optional[Suppressions]:
+    try:
+        with open(path, encoding="utf-8") as f:
+            return Suppressions(f.read())
+    except OSError:
+        return None

@@ -1,0 +1,522 @@
+"""salint rules SAL001–SAL007: the repo's residency/kernel invariants.
+
+Each rule encodes one invariant the paper-reproduction's correctness or
+resource-accounting story depends on; ``python -m tools.salint --explain
+SALxxx`` prints the rationale.  See ``docs/static_analysis.md`` for the
+catalog and the suppression policy.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import ClassVar, Dict, Iterator, List, Optional, Set, Tuple
+
+from tools.salint.engine import FileContext, Rule, Violation, violation_at
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, None for anything else."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _with_item_nodes(tree: ast.AST) -> Set[int]:
+    """ids of every AST node inside a ``with`` item's context expression
+    (calls there are context-managed by construction)."""
+    out: Set[int] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                for sub in ast.walk(item.context_expr):
+                    out.add(id(sub))
+    return out
+
+
+def _enclosing_scopes(tree: ast.AST) -> Dict[int, Tuple[Optional[str], Optional[str]]]:
+    """node id -> (enclosing function name, enclosing class name)."""
+    scopes: Dict[int, Tuple[Optional[str], Optional[str]]] = {}
+
+    def visit(node: ast.AST, fn: Optional[str], cls: Optional[str]) -> None:
+        for child in ast.iter_child_nodes(node):
+            cf, cc = fn, cls
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                cf = child.name
+            elif isinstance(child, ast.ClassDef):
+                cc = child.name
+                cf = None
+            scopes[id(child)] = (cf, cc)
+            visit(child, cf, cc)
+
+    scopes[id(tree)] = (None, None)
+    visit(tree, None, None)
+    return scopes
+
+
+def _func_bodies(tree: ast.AST) -> Dict[str, ast.AST]:
+    """function name -> def node, every nesting level."""
+    return {
+        n.name: n
+        for n in ast.walk(tree)
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+    }
+
+
+def _calls_name(fn_node: ast.AST, names: Set[str]) -> bool:
+    """True when the function body calls any attribute/name in ``names``."""
+    for node in ast.walk(fn_node):
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Attribute) and f.attr in names:
+                return True
+            if isinstance(f, ast.Name) and f.id in names:
+                return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# SAL001 — kernel registry pairing (repo rule)
+# ---------------------------------------------------------------------------
+
+
+class Sal001KernelRegistry(Rule):
+    rule_id = "SAL001"
+    summary = ("every Pallas kernel module is registered in "
+               "kernels/__init__.py with a reference in kernels/ref.py and "
+               "swept by tests/test_kernels.py")
+    rationale = (
+        "The reproduction's kernel claims rest on bit-exact references: every "
+        "Pallas kernel (kernels/<name>.py) must appear in KERNEL_REGISTRY "
+        "(kernels/__init__.py) pairing it with its dispatch op and its "
+        "oracle in kernels/ref.py, and tests/test_kernels.py must sweep the "
+        "registry.  An unregistered kernel would ship without an oracle — "
+        "exactly the silent drift this repo's CI is built to prevent."
+    )
+    repo_level = True
+
+    def __init__(self, kernels_dir: Optional[str] = None,
+                 ref_file: Optional[str] = None,
+                 test_file: Optional[str] = None):
+        self.kernels_dir = kernels_dir
+        self.ref_file = ref_file
+        self.test_file = test_file
+
+    def check_repo(self, root: str) -> Iterator[Violation]:
+        kdir = self.kernels_dir or os.path.join(root, "src", "repro", "kernels")
+        ref_file = self.ref_file or os.path.join(kdir, "ref.py")
+        test_file = self.test_file or os.path.join(
+            root, "tests", "test_kernels.py")
+        init_path = os.path.join(kdir, "__init__.py")
+        if not os.path.isfile(init_path):
+            return
+        with open(init_path, encoding="utf-8") as f:
+            src = f.read()
+        tree = ast.parse(src, filename=init_path)
+
+        registry_node, entries = self._parse_registry(tree)
+        if registry_node is None:
+            yield Violation(self.rule_id, init_path, 1, 0, 1, 0,
+                            "kernels/__init__.py defines no KERNEL_REGISTRY "
+                            "dict (kernel<->reference pairing)")
+            return
+
+        support = {"__init__", "ops", "ref", "compat"}
+        modules = sorted(
+            f[:-3] for f in os.listdir(kdir)
+            if f.endswith(".py") and f[:-3] not in support
+        )
+        for mod in modules:
+            if mod not in entries:
+                yield violation_at(
+                    self.rule_id, init_path, registry_node,
+                    f"kernel module '{mod}.py' is not registered in "
+                    f"KERNEL_REGISTRY (no paired reference)")
+
+        ref_defs = self._top_defs(ref_file)
+        test_src = self._read(test_file)
+        for name, (key_node, ref_name) in entries.items():
+            if ref_name is None:
+                yield violation_at(
+                    self.rule_id, init_path, key_node,
+                    f"registry entry '{name}' has no statically readable "
+                    f"ref (use a string literal)")
+            elif ref_defs is not None and ref_name not in ref_defs:
+                yield violation_at(
+                    self.rule_id, init_path, key_node,
+                    f"registry entry '{name}' names reference "
+                    f"'{ref_name}' which is not defined in kernels/ref.py")
+        if test_src is not None and "KERNEL_REGISTRY" not in test_src:
+            yield Violation(
+                self.rule_id, test_file, 1, 0, 1, 0,
+                "tests/test_kernels.py does not sweep KERNEL_REGISTRY "
+                "(a registered kernel could ship untested)")
+
+    @staticmethod
+    def _parse_registry(tree: ast.Module):
+        """-> (dict node, {key: (key node, ref name or None)})."""
+        for node in ast.walk(tree):
+            targets = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                targets = [node.target]
+            for t in targets:
+                if (isinstance(t, ast.Name) and t.id == "KERNEL_REGISTRY"
+                        and isinstance(node.value, ast.Dict)):
+                    entries = {}
+                    for k, v in zip(node.value.keys, node.value.values,
+                                    strict=True):
+                        if not (isinstance(k, ast.Constant)
+                                and isinstance(k.value, str)):
+                            continue
+                        entries[k.value] = (k, Sal001KernelRegistry._ref_of(v))
+                    return node.value, entries
+        return None, {}
+
+    @staticmethod
+    def _ref_of(value: ast.AST) -> Optional[str]:
+        """ref name out of ``KernelSpec("mod", "op", "ref")`` (positional or
+        keyword) or a plain ("mod", "op", "ref") tuple."""
+        args: List[ast.expr] = []
+        if isinstance(value, ast.Call):
+            for kw in value.keywords:
+                if kw.arg == "ref" and isinstance(kw.value, ast.Constant):
+                    return kw.value.value
+            args = value.args
+        elif isinstance(value, (ast.Tuple, ast.List)):
+            args = value.elts
+        if len(args) >= 3 and isinstance(args[2], ast.Constant) \
+                and isinstance(args[2].value, str):
+            return args[2].value
+        return None
+
+    @staticmethod
+    def _top_defs(path: str) -> Optional[Set[str]]:
+        src = Sal001KernelRegistry._read(path)
+        if src is None:
+            return None
+        return {
+            n.name for n in ast.parse(src).body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+
+    @staticmethod
+    def _read(path: str) -> Optional[str]:
+        try:
+            with open(path, encoding="utf-8") as f:
+                return f.read()
+        except OSError:
+            return None
+
+
+# ---------------------------------------------------------------------------
+# SAL002 — no backend data reads outside the store layer
+# ---------------------------------------------------------------------------
+
+
+class Sal002BackendReads(Rule):
+    rule_id = "SAL002"
+    summary = ("StoreBackend data methods (read_items/read_chunk/"
+               "read_window/gather) may only be called inside the store "
+               "layer — accounting cannot be bypassed")
+    rationale = (
+        "The paper's residency claim is enforced by CorpusStore's byte and "
+        "round accounting; a direct backend.read_items/gather call anywhere "
+        "else fetches corpus bytes invisibly and silently breaks "
+        "Footprint.peak_resident_bytes.  Route reads through "
+        "CorpusStore.stage_items / fetch_windows / fetch_keys, or the "
+        "store-layer helpers (stream_backend_items, chunk_store.load_corpus)."
+    )
+
+    METHODS: ClassVar[Set[str]] = {
+        "read_items", "read_chunk", "read_window", "gather"}
+    ALLOWED = ("core/store.py", "data/chunk_store.py", "core/sanitize.py")
+
+    def check(self, ctx: FileContext) -> Iterator[Violation]:
+        if ctx.endswith(*self.ALLOWED):
+            return
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if not isinstance(f, ast.Attribute) or f.attr not in self.METHODS:
+                continue
+            recv = f.value
+            if isinstance(recv, ast.Name) and recv.id in ("self", "cls"):
+                continue  # a store-layer class calling itself
+            yield violation_at(
+                self.rule_id, ctx.path, node,
+                f"direct backend '.{f.attr}()' call outside core/store.py "
+                f"bypasses store accounting")
+
+
+# ---------------------------------------------------------------------------
+# SAL003 — no corpus-sized host materialization in out-of-core merge code
+# ---------------------------------------------------------------------------
+
+
+class Sal003MergeMaterialization(Rule):
+    rule_id = "SAL003"
+    summary = ("no host materialization (.tolist()/jax.device_get/np.array/"
+               "dtype-converting np.asarray) inside superblock merge/tile "
+               "functions unless the function registers frontier bytes")
+    rationale = (
+        "The out-of-core merge's whole point is that no function holds more "
+        "than a tile/frontier of corpus-derived data; .tolist(), "
+        "jax.device_get, np.array copies, or dtype-converting np.asarray "
+        "calls inside the merge/tile functions create untracked host copies. "
+        "Buffers a merge function must hold are registered via "
+        "CorpusStore.add_frontier (directly or through WindowCursor._account) "
+        "— a function that does so is exempt, because its residency is "
+        "visible to Footprint.peak_resident_bytes."
+    )
+
+    TARGET_BASENAME = "superblock.py"
+    OOC_FUNCS: ClassVar[Set[str]] = {
+        "_merge_path_runs", "_kway_merge", "_merge_runs", "_refine_sort",
+        "_partition", "_partition_runs", "_sorted_runs", "_rank_in_run",
+        "_less_than", "_split_boundary_risk",
+    }
+    REGISTERED: ClassVar[Set[str]] = {"add_frontier", "_account"}
+
+    def check(self, ctx: FileContext) -> Iterator[Violation]:
+        if ctx.basename != self.TARGET_BASENAME:
+            return
+        for name, fn in _func_bodies(ctx.tree).items():
+            if name not in self.OOC_FUNCS:
+                continue
+            if _calls_name(fn, self.REGISTERED):
+                continue  # residency registered with the store: tracked
+            yield from self._scan(fn, ctx)
+
+    def _scan(self, fn: ast.AST, ctx: FileContext) -> Iterator[Violation]:
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "tolist":
+                yield violation_at(
+                    self.rule_id, ctx.path, node,
+                    "'.tolist()' materializes a host list inside an "
+                    "out-of-core merge function")
+            elif name in ("jax.device_get", "jnp.device_get"):
+                yield violation_at(
+                    self.rule_id, ctx.path, node,
+                    "'jax.device_get' pulls a device buffer to host inside "
+                    "an out-of-core merge function")
+            elif name == "np.array" and not (
+                    node.args
+                    and isinstance(node.args[0], (ast.List, ast.Tuple))):
+                # literal-list np.array([...]) is constant-sized, not
+                # corpus-scale; anything else copies its argument.
+                yield violation_at(
+                    self.rule_id, ctx.path, node,
+                    "'np.array' always copies; use a view (np.asarray) or "
+                    "register the buffer via add_frontier")
+            elif name == "np.asarray" and (
+                    len(node.args) >= 2
+                    or any(kw.arg == "dtype" for kw in node.keywords)):
+                yield violation_at(
+                    self.rule_id, ctx.path, node,
+                    "dtype-converting 'np.asarray' copies corpus-scale data "
+                    "inside an out-of-core merge function")
+
+
+# ---------------------------------------------------------------------------
+# SAL004 — frozen configs stay frozen
+# ---------------------------------------------------------------------------
+
+
+class Sal004FrozenConfigMutation(Rule):
+    rule_id = "SAL004"
+    summary = ("no object.__setattr__ mutation of frozen configs outside "
+               "__post_init__")
+    rationale = (
+        "SAConfig/SuperblockConfig are frozen dataclasses so a build's "
+        "geometry cannot drift mid-run (splitter math, packing and stride "
+        "derivations are all cached from them).  object.__setattr__ is the "
+        "one hole in the freeze and is legitimate only inside "
+        "__post_init__; anywhere else it silently invalidates derived state. "
+        "Use dataclasses.replace / repro.config.replace instead."
+    )
+
+    def check(self, ctx: FileContext) -> Iterator[Violation]:
+        scopes = _enclosing_scopes(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if dotted_name(node.func) != "object.__setattr__":
+                continue
+            fn, _cls = scopes.get(id(node), (None, None))
+            if fn == "__post_init__":
+                continue
+            yield violation_at(
+                self.rule_id, ctx.path, node,
+                "object.__setattr__ outside __post_init__ mutates a frozen "
+                "config; use dataclasses.replace")
+
+
+# ---------------------------------------------------------------------------
+# SAL005 — file/memmap handles must have an owner
+# ---------------------------------------------------------------------------
+
+
+class Sal005UnownedHandles(Rule):
+    rule_id = "SAL005"
+    summary = ("every open()/np.memmap in build/serve paths is owned by "
+               "_Scratch, _OutputSink, core/index_io.py, "
+               "data/chunk_store.py, or a context manager")
+    rationale = (
+        "Build and serve paths run for hours and reopen indexes repeatedly; "
+        "an unowned file handle or memmap leaks fds and — on the write side "
+        "— risks renaming before flush.  Handles must be opened in a `with` "
+        "block or belong to the audited owners: _Scratch/_OutputSink "
+        "(superblock spill lifecycle) and the core/index_io.py / "
+        "data/chunk_store.py modules (tmp+rename discipline)."
+    )
+
+    ALLOWED_FILES = ("core/index_io.py", "data/chunk_store.py")
+    OWNER_CLASSES: ClassVar[Set[str]] = {"_Scratch", "_OutputSink"}
+    CALLS: ClassVar[Set[str]] = {
+        "open", "np.memmap", "numpy.memmap",
+        "np.lib.format.open_memmap", "numpy.lib.format.open_memmap"}
+
+    def check(self, ctx: FileContext) -> Iterator[Violation]:
+        if ctx.endswith(*self.ALLOWED_FILES):
+            return
+        managed = _with_item_nodes(ctx.tree)
+        scopes = _enclosing_scopes(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call) or id(node) in managed:
+                continue
+            name = dotted_name(node.func)
+            mmap_load = name in ("np.load", "numpy.load") and any(
+                kw.arg == "mmap_mode" for kw in node.keywords)
+            if name not in self.CALLS and not mmap_load:
+                continue
+            _fn, cls = scopes.get(id(node), (None, None))
+            if cls in self.OWNER_CLASSES:
+                continue
+            what = "np.load(mmap_mode=...)" if mmap_load else f"'{name}'"
+            yield violation_at(
+                self.rule_id, ctx.path, node,
+                f"{what} outside a context manager or an audited owner "
+                f"(_Scratch/_OutputSink/core/index_io.py) leaks the handle")
+
+
+# ---------------------------------------------------------------------------
+# SAL006 — shimmed jax APIs must go through the shim
+# ---------------------------------------------------------------------------
+
+
+class Sal006BypassedShim(Rule):
+    rule_id = "SAL006"
+    summary = ("jax APIs with compat shims (shard_map, axis_size, pvary, "
+               "typeof, vma-carrying ShapeDtypeStruct) must use "
+               "core/distributed.py / kernels/compat.py")
+    rationale = (
+        "The repo runs across jax 0.4.x-0.6+; shard_map's import location, "
+        "axis_size/pvary, typeof and vma-annotated ShapeDtypeStruct all "
+        "moved between versions.  core/distributed.py and "
+        "kernels/compat.py hold the single version-probed implementations; "
+        "a direct jax.* call reintroduces the exact breakage the shims "
+        "exist to absorb and works on only one jax version."
+    )
+
+    ALLOWED_FILES = ("core/distributed.py", "kernels/compat.py")
+    SHIMS: ClassVar[Dict[str, str]] = {
+        "jax.shard_map": "repro.core.distributed.shard_map",
+        "jax.experimental.shard_map.shard_map":
+            "repro.core.distributed.shard_map",
+        "lax.axis_size": "repro.core.distributed.axis_size",
+        "jax.lax.axis_size": "repro.core.distributed.axis_size",
+        "lax.pvary": "repro.core.distributed.pvary",
+        "jax.lax.pvary": "repro.core.distributed.pvary",
+        "lax.pcast": "repro.core.distributed.pvary",
+        "jax.lax.pcast": "repro.core.distributed.pvary",
+        "jax.typeof": "repro.kernels.compat.vma_of",
+    }
+
+    def check(self, ctx: FileContext) -> Iterator[Violation]:
+        if ctx.endswith(*self.ALLOWED_FILES):
+            return
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ImportFrom) and node.module and (
+                    node.module.startswith("jax.experimental.shard_map")):
+                yield violation_at(
+                    self.rule_id, ctx.path, node,
+                    "import shard_map from repro.core.distributed (the "
+                    "version-probed shim), not jax.experimental")
+                continue
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if name in self.SHIMS:
+                yield violation_at(
+                    self.rule_id, ctx.path, node,
+                    f"direct '{name}' has a compat shim: use "
+                    f"{self.SHIMS[name]}")
+            elif name in ("jax.ShapeDtypeStruct",) and any(
+                    kw.arg == "vma" for kw in node.keywords):
+                yield violation_at(
+                    self.rule_id, ctx.path, node,
+                    "vma-carrying ShapeDtypeStruct: use "
+                    "repro.kernels.compat.out_struct (vma kwarg does not "
+                    "exist on older jax)")
+
+
+# ---------------------------------------------------------------------------
+# SAL007 — no new internal callers of deprecated raw-array search wrappers
+# ---------------------------------------------------------------------------
+
+
+class Sal007DeprecatedWrapperCallers(Rule):
+    rule_id = "SAL007"
+    summary = ("internal code must not call the deprecated raw-array search "
+               "wrappers (search_text/count_occurrences/find_occurrences/"
+               "align_reads)")
+    rationale = (
+        "The raw-array wrappers rebuild a transient store per call — "
+        "accounting-invisible and O(corpus) per query.  They exist only for "
+        "external callers of the pre-store API and emit DeprecationWarning; "
+        "internal code (src/, benchmarks/, examples/) must use the "
+        "store-served search_store/count_store/locate_store or "
+        "SuffixArrayIndex.  Their own tests keep exercising them until "
+        "removal."
+    )
+
+    DEPRECATED: ClassVar[Set[str]] = {
+        "search_text", "count_occurrences", "find_occurrences", "align_reads"}
+
+    def check(self, ctx: FileContext) -> Iterator[Violation]:
+        if ctx.basename == "search.py" or ctx.in_dir("tests"):
+            return
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            called = f.id if isinstance(f, ast.Name) else (
+                f.attr if isinstance(f, ast.Attribute) else None)
+            if called in self.DEPRECATED:
+                yield violation_at(
+                    self.rule_id, ctx.path, node,
+                    f"'{called}' is a deprecated raw-array wrapper; use the "
+                    f"store-served API (search_store/count_store/"
+                    f"locate_store) or SuffixArrayIndex")
+
+
+DEFAULT_RULES: Tuple[Rule, ...] = (
+    Sal001KernelRegistry(),
+    Sal002BackendReads(),
+    Sal003MergeMaterialization(),
+    Sal004FrozenConfigMutation(),
+    Sal005UnownedHandles(),
+    Sal006BypassedShim(),
+    Sal007DeprecatedWrapperCallers(),
+)
