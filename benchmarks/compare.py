@@ -1,0 +1,142 @@
+"""Perf-trajectory regression gate: diff a ``benchmarks.run --json`` record
+against a committed baseline and fail loudly on regression.
+
+    PYTHONPATH=src python -m benchmarks.compare BENCH_merge.json \
+        --baseline benchmarks/baselines/BENCH_merge.json --max-regress 20
+
+Two families of gates, per section present in both files:
+
+* **wall time** — the section's ``wall_s`` may exceed the baseline by at
+  most ``--max-regress`` percent plus ``--wall-slack-s`` absolute seconds
+  (tiny sections are all slack, long ones all percentage);
+* **deterministic counters** — any row metric whose name ends in
+  ``rounds``/``roundtrips``/``requests``/``bytes`` (store round-trips,
+  request/response byte totals, peak resident bytes).  These are properties
+  of the algorithm, not of the host, so the allowance is the same
+  percentage with no absolute slack: a merge that suddenly makes more store
+  round-trips fails even if the machine got faster.
+
+Comparisons are refused outright when the two records come from different
+platforms (``sys.platform`` / ``machine`` / ``JAX_PLATFORMS``): wall times
+from a GPU run say nothing about a CPU baseline.  A jax version mismatch
+only warns — counters are still comparable.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+_PLATFORM_KEYS = ("platform", "machine", "jax_platforms")
+_COUNTER_SUFFIXES = ("rounds", "roundtrips", "requests", "bytes")
+
+
+def _is_counter(key: str) -> bool:
+    return key.endswith(_COUNTER_SUFFIXES)
+
+
+def compare(current: dict, baseline: dict, max_regress: float,
+            wall_slack_s: float = 2.0):
+    """Return ``(failures, notes)`` — lists of human-readable strings.
+    ``failures`` non-empty means the gate fails."""
+    failures: list = []
+    notes: list = []
+    cur_meta = current.get("meta") or {}
+    base_meta = baseline.get("meta") or {}
+    if not cur_meta or not base_meta:
+        failures.append(
+            "meta block missing from "
+            + ("both records" if not cur_meta and not base_meta
+               else "the current record" if not cur_meta
+               else "the baseline")
+            + " (re-run benchmarks.run --json with this tree)")
+        return failures, notes
+    for k in _PLATFORM_KEYS:
+        if cur_meta.get(k) != base_meta.get(k):
+            failures.append(
+                f"platform mismatch: {k}={cur_meta.get(k)!r} vs baseline "
+                f"{base_meta.get(k)!r} — comparison refused")
+    if failures:
+        return failures, notes
+    if cur_meta.get("jax_version") != base_meta.get("jax_version"):
+        notes.append(
+            f"note: jax {cur_meta.get('jax_version')} vs baseline "
+            f"{base_meta.get('jax_version')} (counters still comparable)")
+
+    allow = 1.0 + max_regress / 100.0
+    cur_secs = current.get("sections", {})
+    base_secs = baseline.get("sections", {})
+    for name, base_sec in base_secs.items():
+        cur_sec = cur_secs.get(name)
+        if cur_sec is None:
+            failures.append(
+                f"{name}: section in baseline but missing from current run")
+            continue
+        wall, base_wall = cur_sec.get("wall_s"), base_sec.get("wall_s")
+        limit = base_wall * allow + wall_slack_s
+        if wall > limit:
+            failures.append(
+                f"{name}: wall {wall:.2f}s > {limit:.2f}s "
+                f"(baseline {base_wall:.2f}s +{max_regress:.0f}% "
+                f"+{wall_slack_s:.1f}s)")
+        else:
+            notes.append(f"{name}: wall {wall:.2f}s vs {base_wall:.2f}s ok")
+        base_rows = base_sec.get("rows") or []
+        cur_rows = cur_sec.get("rows") or []
+        if len(cur_rows) != len(base_rows):
+            failures.append(
+                f"{name}: {len(cur_rows)} rows vs baseline "
+                f"{len(base_rows)} — benchmark shape changed; "
+                f"refresh the baseline deliberately")
+            continue
+        for i, (cr, br) in enumerate(zip(cur_rows, base_rows)):
+            if not isinstance(cr, dict) or not isinstance(br, dict):
+                continue
+            label = cr.get("corpus") or cr.get("case") or cr.get("name") or i
+            for key, bv in br.items():
+                if not _is_counter(key):
+                    continue
+                cv = cr.get(key)
+                if not isinstance(bv, (int, float)) or \
+                        not isinstance(cv, (int, float)):
+                    continue
+                if cv > bv * allow:
+                    failures.append(
+                        f"{name}[{label}].{key}: {cv} > baseline {bv} "
+                        f"+{max_regress:.0f}%")
+    for name in cur_secs:
+        if name not in base_secs:
+            notes.append(f"note: section {name!r} has no baseline yet")
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="gate a benchmarks.run --json record against a baseline")
+    ap.add_argument("current", help="JSON written by benchmarks.run --json")
+    ap.add_argument("--baseline", required=True,
+                    help="committed baseline JSON to compare against")
+    ap.add_argument("--max-regress", type=float, default=20.0, metavar="PCT",
+                    help="allowed regression in percent (default 20)")
+    ap.add_argument("--wall-slack-s", type=float, default=2.0, metavar="S",
+                    help="absolute wall-time slack per section (default 2s)")
+    args = ap.parse_args(argv)
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures, notes = compare(current, baseline, args.max_regress,
+                              args.wall_slack_s)
+    for n in notes:
+        print(n)
+    if failures:
+        for msg in failures:
+            print(f"REGRESSION: {msg}", file=sys.stderr)
+        return 1
+    print(f"# {args.current} within {args.max_regress:.0f}% of "
+          f"{args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,15 +8,49 @@ Each section prints CSV (name,value columns) so EXPERIMENTS.md tables can be
 regenerated from the output.  ``--json PATH`` additionally records the
 machine-readable perf trajectory: per section, the wall time and the rows the
 section returned (the ``merge``/``streaming``/``superblock`` sections include
-store round-trips and peak resident bytes per run) — diffable across commits.
+store round-trips and peak resident bytes per run) — diffable across commits
+and gated against ``benchmarks/baselines/`` by ``benchmarks.compare``.  The
+JSON carries a ``meta`` block (git sha, platform, jax version,
+``JAX_PLATFORMS``) so compare refuses to diff runs from different platforms.
 """
 import argparse
 import json
+import os
+import platform
+import subprocess
+import sys
 import time
+
+
+def run_meta() -> dict:
+    """Provenance of a benchmark run: enough to refuse apples-to-oranges
+    comparisons (platform mismatch) and to trace a baseline to its commit."""
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            check=False,
+        ).stdout.strip() or None
+    except OSError:
+        sha = None
+    try:
+        import jax
+        jax_version = jax.__version__
+    except Exception:
+        jax_version = None
+    return {
+        "git_sha": sha,
+        "platform": sys.platform,
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        "jax_version": jax_version,
+        "jax_platforms": os.environ.get("JAX_PLATFORMS"),
+    }
 
 
 def main() -> None:
     from benchmarks import (
+        build,
         efficiency,
         footprint,
         partition,
@@ -41,6 +75,9 @@ def main() -> None:
         # batched query engine vs host-serial search (identity gates) +
         # save->open round trip + qps/latency under a hot-set replay
         "serve": serving.run,
+        # pipelined vs synchronous out-of-core build over a throttled store
+        # (bit-identity + >= 1.2x overlap gate)
+        "build": build.run,
     }
     ap = argparse.ArgumentParser()
     ap.add_argument("sections", nargs="*", metavar="SECTION",
@@ -64,7 +101,8 @@ def main() -> None:
     print(f"\n# total bench time: {total:.1f}s")
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"total_s": round(total, 3), "sections": record},
+            json.dump({"total_s": round(total, 3), "meta": run_meta(),
+                       "sections": record},
                       f, indent=2, default=repr)
         print(f"# wrote {args.json}")
 

@@ -22,13 +22,13 @@ from __future__ import annotations
 import json
 import os
 import shutil
-import threading
-from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Optional
 
 import jax
 import msgpack
 import numpy as np
+
+from repro.core.pipeline_exec import PipelineExecutor, PipelineTask
 
 try:  # bf16 & friends round-trip as raw bytes + a recorded dtype name
     import ml_dtypes
@@ -51,8 +51,10 @@ class CheckpointManager:
         self.dir = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
-        self._pool = ThreadPoolExecutor(max_workers=1)
-        self._last: Optional[Future] = None
+        # background writes share the repo's one sanctioned executor shape
+        # (bounded queue, original-exception propagation, deterministic join)
+        self._pool = PipelineExecutor(depth=1, name="ckpt-writer")
+        self._last: Optional[PipelineTask] = None
 
     # -- save -------------------------------------------------------------
     def save(self, step: int, tree: Any, extra: Optional[dict] = None,

@@ -395,6 +395,15 @@ class SuperblockConfig:
       sampled window subset oracle-verified on every fetch, every emitted
       merge piece order-checked.  Equivalent to ``REPRO_SANITIZE=1``;
       output is bit-identical to an unsanitized build, only slower.
+    ``pipeline_depth``: number of in-flight background buffers in the
+      pipelined build (``repro.core.pipeline_exec``).  ``0`` runs the
+      fully synchronous path; ``>= 1`` overlaps block staging with the
+      device build, spill/output writes with the merge, and merge-tile
+      key refills with tile ranking.  Output is bit-identical either
+      way.  Staging prefetch additionally requires the prefetched block
+      to fit inside ``cache_budget_bytes`` (prefetched bytes are counted
+      against the budget via ``add_frontier``); when it does not fit,
+      staging silently falls back to synchronous.
     """
 
     max_records_per_run: int = 0
@@ -411,6 +420,7 @@ class SuperblockConfig:
     emit_lcp: bool = False
     write_manifest: bool = False
     sanitize: bool = False
+    pipeline_depth: int = 1
 
 
 # ---------------------------------------------------------------------------

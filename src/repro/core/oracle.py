@@ -49,8 +49,11 @@ def doubling_sa_text(text: np.ndarray) -> np.ndarray:
     rank = text.copy()
     k = 1
     while True:
-        rank2 = np.zeros(n, np.int64)
-        rank2[: n - k] = rank[k:]
+        # pad with -1, not 0: re-ranking is 0-based, so a 0 pad collides
+        # with the smallest suffix's rank and two suffixes can tie forever
+        rank2 = np.full(n, -1, np.int64)
+        if k < n:
+            rank2[: n - k] = rank[k:]
         order = np.lexsort((rank2, rank))
         new = np.zeros(n, np.int64)
         r_o, r2_o = rank[order], rank2[order]

@@ -1,0 +1,153 @@
+"""Bounded background executor for the pipelined out-of-core build.
+
+All background work in this repo goes through :class:`PipelineExecutor`
+(enforced by salint rule SAL008): a single worker thread draining a
+bounded queue. The bound is the double-buffer depth — ``submit`` blocks
+once ``depth`` tasks are in flight, so a producer can never run ahead of
+the consumer by more than the configured number of buffers. That is what
+keeps the staging prefetch inside ``cache_budget_bytes``: at most
+``depth`` prefetched blocks are ever resident.
+
+Guarantees:
+
+- **FIFO ordering** — tasks run in submission order on one thread, so
+  ordered side effects (spill files, output-sink writes) land in the
+  same order as the synchronous path.
+- **Exception propagation** — a task's exception is stored and re-raised
+  (the original object, original type) from ``PipelineTask.result()``,
+  ``drain()``, and ``close()``. A failed task does not kill the worker;
+  later tasks still run so cleanup work can be queued behind a failure.
+- **Deterministic join** — ``close()`` waits for the queue to empty and
+  joins the worker thread before returning; it is idempotent and safe
+  from ``finally`` blocks. The context manager form closes on exit.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Optional
+
+__all__ = ["PipelineExecutor", "PipelineTask"]
+
+_SENTINEL = object()
+
+
+class PipelineTask:
+    """Handle for one submitted callable; ``result()`` blocks and re-raises."""
+
+    __slots__ = ("_done", "_value", "_exc", "_observed")
+
+    def __init__(self) -> None:
+        self._done = threading.Event()
+        self._value: Any = None
+        self._exc: Optional[BaseException] = None
+        self._observed = False  # exception already delivered via result()
+
+    def _finish(self, value: Any, exc: Optional[BaseException]) -> None:
+        self._value = value
+        self._exc = exc
+        self._done.set()
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        if not self._done.wait(timeout):
+            raise TimeoutError("pipeline task did not complete in time")
+        if self._exc is not None:
+            self._observed = True
+            raise self._exc
+        return self._value
+
+
+class PipelineExecutor:
+    """Single worker thread + bounded FIFO queue (double buffer of ``depth``)."""
+
+    def __init__(self, depth: int = 1, name: str = "pipeline") -> None:
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        self.depth = int(depth)
+        self._queue: "queue.Queue" = queue.Queue(maxsize=self.depth)
+        self._pending: list[PipelineTask] = []
+        self._closed = False
+        self._worker = threading.Thread(  # salint: disable=SAL008
+            target=self._run, name=name, daemon=True
+        )
+        self._worker.start()
+
+    # -- worker ----------------------------------------------------------
+
+    def _run(self) -> None:
+        while True:
+            item = self._queue.get()
+            try:
+                if item is _SENTINEL:
+                    return
+                task, fn, args, kwargs = item
+                try:
+                    value = fn(*args, **kwargs)
+                except BaseException as exc:  # noqa: BLE001 - stored, re-raised
+                    task._finish(None, exc)
+                else:
+                    task._finish(value, None)
+            finally:
+                self._queue.task_done()
+
+    # -- producer API ----------------------------------------------------
+
+    def submit(self, fn: Callable[..., Any], *args: Any, **kwargs: Any) -> PipelineTask:
+        """Queue ``fn(*args, **kwargs)``; blocks while ``depth`` tasks are in flight."""
+        if self._closed:
+            raise RuntimeError("submit on closed PipelineExecutor")
+        task = PipelineTask()
+        self._pending.append(task)
+        self._queue.put((task, fn, args, kwargs))
+        return task
+
+    def drain(self) -> None:
+        """Wait for all submitted tasks; raise the first unobserved exception
+        (one already delivered through ``result()`` is not raised twice)."""
+        pending, self._pending = self._pending, []
+        first: Optional[BaseException] = None
+        for task in pending:
+            task._done.wait()
+            if first is None and task._exc is not None and not task._observed:
+                task._observed = True
+                first = task._exc
+        if first is not None:
+            raise first
+
+    def close(self) -> None:
+        """Drain the queue, join the worker. Idempotent; raises pending errors."""
+        if self._closed:
+            return
+        self._closed = True
+        self._queue.put(_SENTINEL)
+        self._worker.join()
+        pending, self._pending = self._pending, []
+        first: Optional[BaseException] = None
+        for task in pending:
+            if task._exc is not None and not task._observed and first is None:
+                task._observed = True
+                first = task._exc
+        if first is not None:
+            raise first
+
+    @property
+    def alive(self) -> bool:
+        return self._worker.is_alive()
+
+    def __enter__(self) -> "PipelineExecutor":
+        return self
+
+    def __exit__(self, exc_type: Any, exc: Any, tb: Any) -> None:
+        if exc_type is None:
+            self.close()
+        else:
+            # Already unwinding: still join deterministically, but don't
+            # let a worker error mask the caller's exception.
+            try:
+                self.close()
+            except BaseException:  # noqa: BLE001
+                pass

@@ -17,6 +17,7 @@ All methods are *per-device* functions meant to be called inside ``shard_map``.
 from __future__ import annotations
 
 import math
+import time
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Iterator, Optional, Tuple
@@ -513,6 +514,56 @@ class ChunkedFileBackend(StoreBackend):
 
     def read_items(self, lo: int, hi: int) -> np.ndarray:
         return self._reader.read_items(lo, hi)
+
+
+class ThrottledBackend(StoreBackend):
+    """Deterministic slow-medium proxy around any :class:`StoreBackend`.
+
+    Adds a fixed ``time.sleep`` to every ``gather`` and ``read_items`` call,
+    simulating the paper's network/disk tier with a latency that does not
+    depend on machine load — which is what makes the pipelined-vs-synchronous
+    build benchmark (``benchmarks.run build``) reproducible in CI: the sleep
+    releases the GIL, so the overlap the pipeline claims is genuine overlap,
+    and the measured speedup is a property of the schedule, not of the host's
+    momentary disk speed.  Geometry and counters delegate to the wrapped
+    backend; accounting semantics are unchanged.
+    """
+
+    def __init__(self, inner: StoreBackend, gather_delay_s: float = 0.0,
+                 read_delay_s: float = 0.0):
+        self.inner = inner
+        self.gather_delay_s = float(gather_delay_s)
+        self.read_delay_s = float(read_delay_s)
+        self.gather_calls = 0
+        self.read_calls = 0
+        self.throttled_calls = 0
+        self.throttled_sleep_s = 0.0
+
+    def __getattr__(self, name: str):
+        return getattr(self.inner, name)
+
+    @property
+    def resident_bytes(self) -> int:
+        return self.inner.resident_bytes
+
+    def _sleep(self, seconds: float) -> None:
+        if seconds > 0:
+            time.sleep(seconds)
+            self.throttled_calls += 1
+            self.throttled_sleep_s += seconds
+
+    def gather(self, gidx: np.ndarray, depth: np.ndarray) -> np.ndarray:
+        self.gather_calls += 1
+        self._sleep(self.gather_delay_s)
+        return self.inner.gather(gidx, depth)
+
+    def read_items(self, lo: int, hi: int) -> np.ndarray:
+        self.read_calls += 1
+        self._sleep(self.read_delay_s)
+        return self.inner.read_items(lo, hi)
+
+    def close(self) -> None:
+        self.inner.close()
 
 
 # ---------------------------------------------------------------------------

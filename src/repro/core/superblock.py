@@ -52,11 +52,13 @@ The peak number of records any single run held is reported in
 """
 from __future__ import annotations
 
+import contextlib
 import heapq
 import math
 import os
 import shutil
 import tempfile
+import time
 import uuid
 import warnings
 from dataclasses import dataclass
@@ -67,6 +69,7 @@ import numpy as np
 from repro.config import SAConfig, SuperblockConfig
 from repro.core.lcp import lcp_from_sa, pairwise_lcp
 from repro.core.pipeline import DeviceRefiner, build_suffix_array
+from repro.core.pipeline_exec import PipelineExecutor
 from repro.core.sanitize import (
     SanitizingBackend,
     SanitizingSink,
@@ -189,16 +192,33 @@ def corpus_shape_of(corpus) -> Tuple[int, ...]:
 
 class _Scratch:
     """Private scratch directory for one streaming build (serialized corpus,
-    per-block SA spills); removed when the build finishes."""
+    per-block SA spills); removed when the build finishes.
 
-    def __init__(self, parent: Optional[str]):
+    With an ``executor`` attached (``SuperblockConfig.pipeline_depth >= 1``)
+    the spill *write* runs on the background worker: the memmap is created
+    immediately (so the caller keeps its disk-backed handle and frees the
+    host run right away) but its pages are filled and flushed behind the
+    device build of the next block.  Callers must :meth:`drain_spills`
+    before the first read of any spilled run — the superblock merge does so
+    once between phase 2 and phase 3 and once after re-spilling risk runs.
+    """
+
+    def __init__(self, parent: Optional[str],
+                 executor: Optional[PipelineExecutor] = None):
         self.dir = tempfile.mkdtemp(prefix="sa_superblock_", dir=parent)
         self._n = 0
         self.spilled_runs = 0
         self.spilled_bytes = 0
+        self.executor = executor
+        self._pending: List = []
 
     def path(self, name: str) -> str:
         return os.path.join(self.dir, name)
+
+    @staticmethod
+    def _fill(out: np.ndarray, arr: np.ndarray) -> None:
+        out[:] = arr
+        out.flush()
 
     def spill_run(self, arr: np.ndarray) -> np.ndarray:
         """Spill a sorted run to disk and hand back a read-only memmap: the
@@ -206,10 +226,22 @@ class _Scratch:
         (frontier read-ahead, partition probes) come resident."""
         p = self.path(f"run{self._n}.npy")
         self._n += 1
-        np.save(p, np.ascontiguousarray(arr))
+        arr = np.ascontiguousarray(arr)
         self.spilled_runs += 1
         self.spilled_bytes += int(arr.size) * arr.dtype.itemsize
+        if self.executor is not None:
+            out = np.lib.format.open_memmap(
+                p, mode="w+", dtype=arr.dtype, shape=arr.shape)
+            self._pending.append(self.executor.submit(self._fill, out, arr))
+            return out
+        np.save(p, arr)
         return np.load(p, mmap_mode="r")
+
+    def drain_spills(self) -> None:
+        """Wait for in-flight spill writes (re-raises a worker failure)."""
+        pending, self._pending = self._pending, []
+        for task in pending:
+            task.result()
 
     def cleanup(self) -> None:
         shutil.rmtree(self.dir, ignore_errors=True)
@@ -288,12 +320,16 @@ class _MergeFrontier:
     def per_run(self, num_runs: int) -> int:
         return max(2, self.readahead_bytes // (max(1, num_runs) * self.window_bytes))
 
-    def per_run_keys(self, num_runs: int, key_words: int) -> int:
+    def per_run_keys(self, num_runs: int, key_words: int,
+                     buffers: int = 2) -> int:
         """Merge-path tile width under the same read-ahead budget: tile
         buffers hold *packed* key rows, so the per-element estimate is two
         levels of key words plus the flag lanes (deep-tie escalation can
-        widen rows further; the budget's slack share absorbs it)."""
-        est = 2 * (key_words + 1) * 4
+        widen rows further; the budget's slack share absorbs it).  The
+        pipelined merge passes ``buffers=3``: its refill prefetch keeps up
+        to one extra tile of pending key rows resident per run, so the tile
+        narrows to keep the same byte budget."""
+        est = buffers * (key_words + 1) * 4
         return max(2, self.readahead_bytes // (max(1, num_runs) * est))
 
 
@@ -686,12 +722,22 @@ class _OutputSink:
     _LCP_BATCH = 1 << 16
 
     def __init__(self, total: int, memmap_path: Optional[str] = None,
-                 lcp_path: Optional[str] = None, pair_lcp=None):
+                 lcp_path: Optional[str] = None, pair_lcp=None,
+                 executor: Optional[PipelineExecutor] = None):
         self.total = int(total)
         self.written = 0
         self.pieces = 0
         self.max_piece = 0
         self.path = memmap_path
+        # with an executor the SA-array writes run on the background worker
+        # (emitted pieces are freshly allocated, so hand-off is safe; FIFO
+        # submission order preserves write order).  LCP emission stays on
+        # the caller thread: it is store traffic, and the store belongs to
+        # the merge loop.  ``result`` drains the writer before the
+        # flush + rename, so fsync/rename semantics are unchanged.
+        self._exec = executor
+        self._tasks: List = []
+        self._finalized = False
         if memmap_path is not None:
             # write under a unique temp name and atomically rename on
             # completion: reusing a spill_dir must never truncate the inode
@@ -722,10 +768,17 @@ class _OutputSink:
             return
         if self._pair_lcp is not None:
             self._append_lcp(piece)
-        self._out[self.written : self.written + m] = piece
+        if self._exec is not None:
+            self._tasks.append(
+                self._exec.submit(self._write, self.written, piece))
+        else:
+            self._out[self.written : self.written + m] = piece
         self.written += m
         self.pieces += 1
         self.max_piece = max(self.max_piece, m)
+
+    def _write(self, lo: int, piece: np.ndarray) -> None:
+        self._out[lo : lo + piece.shape[0]] = piece
 
     def _append_lcp(self, piece: np.ndarray) -> None:
         p = np.asarray(piece)  # memmap pieces stay views, batches copy below
@@ -746,6 +799,8 @@ class _OutputSink:
 
     def result(self) -> np.ndarray:
         assert self.written == self.total, (self.written, self.total)
+        self._drain()
+        self._finalized = True
         if self.lcp_path is not None:
             self._lcp.flush()
             del self._lcp
@@ -757,6 +812,31 @@ class _OutputSink:
             os.replace(self._tmp, self.path)
             self._out = np.load(self.path, mmap_mode="r+")
         return self._out
+
+    def _drain(self) -> None:
+        """Wait for in-flight background writes (re-raises a write failure)."""
+        tasks, self._tasks = self._tasks, []
+        for t in tasks:
+            t.result()
+
+    def abort(self) -> None:
+        """Failure path: wait out in-flight writes, drop the write mappings,
+        and unlink the tmp files so a failed build leaves no orphaned
+        ``.tmp`` memmaps in ``spill_dir``.  No-op after :meth:`result`."""
+        if self._finalized:
+            return
+        tasks, self._tasks = self._tasks, []
+        for t in tasks:
+            with contextlib.suppress(BaseException):
+                t.result()
+        if self.path is not None:
+            self._out = None
+            with contextlib.suppress(OSError):
+                os.unlink(self._tmp)
+        if self.lcp_path is not None:
+            self._lcp = None
+            with contextlib.suppress(OSError):
+                os.unlink(self._lcp_tmp)
 
     @property
     def lcp(self) -> Optional[np.ndarray]:
@@ -778,7 +858,8 @@ class _RunTile:
     for every group member before comparing it).
     """
 
-    __slots__ = ("run", "pos", "count", "words", "levels", "ended", "kw")
+    __slots__ = ("run", "pos", "count", "words", "levels", "ended", "kw",
+                 "pend_keys", "pend_ended")
 
     def __init__(self, run: np.ndarray, kw: int):
         self.run = run
@@ -788,6 +869,18 @@ class _RunTile:
         self.words = np.zeros((0, kw), np.int32)
         self.levels = np.zeros((0,), np.int32)  # fetched levels per member
         self.ended = np.zeros((0,), bool)
+        # prefetched depth-0 keys for run[pos+count : pos+count+pending]:
+        # ``consume`` leaves ``pos + count`` invariant, so rows prefetched
+        # during ranking stay valid whatever the emit horizon turns out to
+        # be — the next refill serves its prefix from here instead of the
+        # store (each run position's depth-0 window is fetched exactly once,
+        # pipelined or not).
+        self.pend_keys = np.zeros((0, kw), np.int32)
+        self.pend_ended = np.zeros((0,), bool)
+
+    @property
+    def pending(self) -> int:
+        return int(self.pend_keys.shape[0])
 
     @property
     def remaining(self) -> int:
@@ -804,12 +897,42 @@ class _RunTile:
         return np.asarray(self.run[self.pos : self.pos + self.count], np.int64)
 
     def need(self, tile: int) -> np.ndarray:
-        """Run members to fetch so the buffer covers min(tile, remaining)."""
-        want = min(tile, self.remaining) - self.count
+        """Run members to fetch so the buffer covers min(tile, remaining)
+        (members already prefetched into the pending buffer excluded)."""
+        want = min(tile, self.remaining) - self.count - self.pending
         if want <= 0:
             return np.zeros((0,), np.int64)
-        lo = self.pos + self.count
+        lo = self.pos + self.count + self.pending
         return np.asarray(self.run[lo : lo + want], np.int64)
+
+    def prefetch_need(self, tile: int) -> np.ndarray:
+        """Run members whose depth-0 keys the *next* refill could possibly
+        ask for: however many members emit consumes, the next window starts
+        at the invariant ``pos + count`` and covers at most
+        ``min(tile, remaining - count)`` members, so prefetching up to there
+        never fetches a key the synchronous path would not."""
+        cap = min(tile, self.remaining - self.count) - self.pending
+        if cap <= 0:
+            return np.zeros((0,), np.int64)
+        lo = self.pos + self.count + self.pending
+        return np.asarray(self.run[lo : lo + cap], np.int64)
+
+    def admit_pending(self, keys: np.ndarray, ended: np.ndarray) -> None:
+        if keys.shape[0] == 0:
+            return
+        self.pend_keys = np.concatenate([self.pend_keys, keys])
+        self.pend_ended = np.concatenate(
+            [self.pend_ended, np.asarray(ended, bool)])
+
+    def admit(self, keys: np.ndarray, ended: np.ndarray, tile: int) -> None:
+        """Refill: queue freshly fetched rows behind the pending buffer,
+        then move the head of the pending buffer into the live tile."""
+        self.admit_pending(keys, ended)
+        take = min(min(tile, self.remaining) - self.count, self.pending)
+        if take > 0:
+            self.extend(self.pend_keys[:take], self.pend_ended[:take])
+            self.pend_keys = self.pend_keys[take:]
+            self.pend_ended = self.pend_ended[take:]
 
     def extend(self, keys: np.ndarray, ended: np.ndarray) -> None:
         m = keys.shape[0]
@@ -841,7 +964,8 @@ class _RunTile:
 
     @property
     def nbytes(self) -> int:
-        return int(self.words.nbytes + self.levels.nbytes + self.ended.nbytes)
+        return int(self.words.nbytes + self.levels.nbytes + self.ended.nbytes
+                   + self.pend_keys.nbytes + self.pend_ended.nbytes)
 
 
 def _group_ids(prev: Optional[np.ndarray], cols: np.ndarray) -> np.ndarray:
@@ -871,6 +995,7 @@ def _merge_path_runs(
     use_pallas: bool,
     refiner: Optional[DeviceRefiner] = None,
     frontier: Optional[_MergeFrontier] = None,
+    executor: Optional[PipelineExecutor] = None,
 ) -> int:
     """Merge exactly-sorted runs by merge-path tiles; emit in final order.
 
@@ -899,7 +1024,8 @@ def _merge_path_runs(
     if merge_tile > 0:  # explicit knob wins, streaming or not
         tile = merge_tile
     elif frontier is not None:
-        tile = frontier.per_run_keys(len(runs), kw)
+        tile = frontier.per_run_keys(
+            len(runs), kw, buffers=3 if executor is not None else 2)
     else:
         tile = 4096
     tile = max(2, min(tile, cap // max(1, len(runs))))
@@ -916,17 +1042,26 @@ def _merge_path_runs(
         return cur
 
     while any(t.buffered or t.remaining for t in tiles):
-        # ---- refill: one batched store round for every run's new heads ----
+        # ---- refill: one batched store round for every run's new heads
+        # (heads already prefetched into a tile's pending buffer are served
+        # from there; only the remainder touches the store) ----
         needs = [t.need(tile) for t in tiles]
         flat = np.concatenate(needs)
+        keys = ended = None
         if flat.size:
             keys, ended = store.fetch_keys(flat, 0)
-            off = 0
-            for t, n in zip(tiles, needs, strict=True):
-                t.extend(keys[off : off + n.size], ended[off : off + n.size])
-                off += n.size
-            _account()  # register the refill before escalation fetches, so
-            # LRU-loading rounds see the full frontier in peak_resident
+        off = 0
+        empty_k = np.zeros((0, kw), np.int32)
+        empty_e = np.zeros((0,), bool)
+        for t, n in zip(tiles, needs, strict=True):
+            if n.size:
+                t.admit(keys[off : off + n.size], ended[off : off + n.size],
+                        tile)
+            else:
+                t.admit(empty_k, empty_e, tile)
+            off += n.size
+        _account()  # register the refill before escalation fetches, so
+        # LRU-loading rounds see the full frontier in peak_resident
         live = [t for t in tiles if t.buffered]
         cand_gidx = np.concatenate([t.gidx for t in live])
         c = cand_gidx.shape[0]
@@ -988,6 +1123,21 @@ def _merge_path_runs(
             level += 1
         _account()
 
+        # ---- prefetch the next refill while this tile ranks ---------------
+        # The store is quiescent during ranking (the Pallas kernel runs on
+        # device, the numpy reference is a pure lexsort), so the background
+        # worker owns it for exactly this window: one batched depth-0
+        # fetch_keys for every run's next-possible window, collected below
+        # *before* emit (whose pair-LCP / audit traffic touches the store
+        # again).  Positions are served once either way — byte and request
+        # totals match the synchronous path.
+        pf_task = pf_needs = None
+        if executor is not None:
+            pf_needs = [t.prefetch_need(tile) for t in tiles]
+            pf_flat = np.concatenate(pf_needs)
+            if pf_flat.size:
+                pf_task = executor.submit(store.fetch_keys, pf_flat, 0)
+
         # ---- rank the tile: merge-path diagonal ranks in one shot ---------
         cand_words = np.concatenate([t.words for t in live])
         if tie_col is not None:
@@ -1006,6 +1156,16 @@ def _merge_path_runs(
             ).astype(np.int64)
         else:
             ranks = store.rank_windows(cand_words, cand_gidx)
+
+        # ---- collect the prefetched refill (store is ours again) ----------
+        if pf_task is not None:
+            pf_keys, pf_ended = pf_task.result()
+            off = 0
+            for t, n in zip(tiles, pf_needs, strict=True):
+                t.admit_pending(pf_keys[off : off + n.size],
+                                pf_ended[off : off + n.size])
+                off += n.size
+            _account()
 
         # ---- emit everything below the safety horizon ---------------------
         bounds = np.cumsum([0, *(t.buffered for t in live)])
@@ -1127,6 +1287,53 @@ def _build_superblock(
     scratch: Optional[_Scratch],
     original_corpus,
 ) -> SAResult:
+    """Executor-lifecycle wrapper around the phased build.
+
+    ``sb.pipeline_depth >= 1`` attaches one background worker
+    (:class:`repro.core.pipeline_exec.PipelineExecutor`) that the three
+    overlaps share — block-staging prefetch, spill/output writes, merge
+    refill prefetch.  The wrapper owns its deterministic shutdown: on
+    success the executor is drained and joined (re-raising any unobserved
+    worker failure); on any failure the output sink's tmp memmaps are
+    unlinked and the worker is still joined before the original exception
+    propagates.
+    """
+    pipe: Optional[PipelineExecutor] = None
+    if sb.pipeline_depth > 0:
+        pipe = PipelineExecutor(depth=sb.pipeline_depth, name="sa-pipeline")
+    if scratch is not None:
+        scratch.executor = pipe
+    sinks: List[_OutputSink] = []  # parked here so the failure path can
+    # remove tmp memmaps whichever phase raised
+    try:
+        res = _build_superblock_phases(
+            backend, lengths, cfg, sb, mesh, scratch, original_corpus,
+            pipe, sinks,
+        )
+    except BaseException:
+        for s in sinks:
+            with contextlib.suppress(BaseException):
+                s.abort()
+        if pipe is not None:
+            with contextlib.suppress(BaseException):
+                pipe.close()
+        raise
+    if pipe is not None:
+        pipe.close()
+    return res
+
+
+def _build_superblock_phases(
+    backend: StoreBackend,
+    lengths,
+    cfg: SAConfig,
+    sb: SuperblockConfig,
+    mesh,
+    scratch: Optional[_Scratch],
+    original_corpus,
+    pipe: Optional[PipelineExecutor],
+    sinks: List["_OutputSink"],
+) -> SAResult:
     if sb.write_manifest and not sb.spill_dir:
         raise ValueError(
             "write_manifest needs spill_dir: the manifest finalizes that "
@@ -1200,8 +1407,53 @@ def _build_superblock(
         superblocks=plan.num_superblocks,
     )
     block_stats = []
-    for lo, hi in plan.blocks:
-        block = store.stage_items(lo, hi)  # transient staging, not cached
+    blocks = list(plan.blocks)
+    # -- staging prefetch: while block i runs on device, the worker stages
+    # block i+1 (up to pipeline_depth ahead).  On streaming builds each
+    # prefetched block's bytes are registered through add_frontier so the
+    # residency bound still holds with the read-ahead buffer resident — the
+    # budget's non-LRU half (idle during phase 2) is the read-ahead ceiling,
+    # and a block too big for it silently stages synchronously instead.
+    stage_share = 0
+    if streaming:
+        budget = (sb.cache_budget_bytes if sb.cache_budget_bytes > 0
+                  else DEFAULT_CACHE_BUDGET)
+        stage_share = budget // 2
+    prefetched: dict = {}
+    pf_registered = 0
+
+    def _submit_stages(next_i: int) -> None:
+        nonlocal pf_registered
+        if pipe is None:
+            return
+        for j in range(next_i, min(len(blocks), next_i + pipe.depth)):
+            if j in prefetched:
+                continue
+            blo, bhi = blocks[j]
+            reg = 0
+            if streaming:
+                reg = (bhi - blo) * max(1, backend.row_len) * 4
+                if pf_registered + reg > stage_share:
+                    break  # would overrun the budget share: stage it sync
+                store.add_frontier(reg)
+                pf_registered += reg
+            prefetched[j] = (pipe.submit(store.stage_items, blo, bhi), reg)
+
+    t_stage = t_build = 0.0
+    for i, (lo, hi) in enumerate(blocks):
+        t0 = time.perf_counter()
+        entry = prefetched.pop(i, None)
+        if entry is not None:
+            task, reg = entry
+            block = task.result()  # staged in the background, not cached
+            if reg:
+                store.add_frontier(-reg)
+                pf_registered -= reg
+        else:
+            block = store.stage_items(lo, hi)  # transient staging, not cached
+        _submit_stages(i + 1)  # overlap: next blocks stage while this builds
+        t_stage += time.perf_counter() - t0
+        t0 = time.perf_counter()
         if plan.text_mode:
             res = build_suffix_array(block, cfg=cfg, mesh=mesh)
             sa_b = res.suffix_array + lo
@@ -1218,8 +1470,12 @@ def _build_superblock(
         fp.dropped += bf.dropped
         fp.peak_records = max(fp.peak_records, res.stats["num_suffixes"])
         block_stats.append(res.stats)
+        t_build += time.perf_counter() - t0
+    if scratch is not None:
+        scratch.drain_spills()  # spilled runs must be on disk before reads
 
     # ---- phase 3: boundary-exact merge via the store -------------------
+    t_merge0 = time.perf_counter()
     samples = max(1, min(
         sb.samples_per_block,
         plan.capacity_records // plan.num_superblocks,
@@ -1241,7 +1497,8 @@ def _build_superblock(
         if sb.spill_dir is not None:
             lcp_path = os.path.join(sb.spill_dir, "lcp.npy")
     sink = _OutputSink(total_suffixes, memmap_path=out_path,
-                       lcp_path=lcp_path, pair_lcp=pair_lcp)
+                       lcp_path=lcp_path, pair_lcp=pair_lcp, executor=pipe)
+    sinks.append(sink)
     if sanitize_enabled(sb):
         # order-verify emitted pieces through a private audit store: the
         # build store's traffic counters (gated by benchmarks) stay clean.
@@ -1288,6 +1545,8 @@ def _build_superblock(
                     for p in _sorted_runs(store, risk, cap, samples, refine)
                     if p.size
                 ]
+            if scratch is not None:
+                scratch.drain_spills()  # the merge reads these runs next
             return runs, risk_pieces
         # reads mode: block runs are exact as-is (suffixes never cross a
         # read) — unless a block hit the refinement hard cap, in which
@@ -1302,6 +1561,8 @@ def _build_superblock(
                     store, np.concatenate(bad), cap, samples, refine)
                 if p.size
             ]
+        if scratch is not None:
+            scratch.drain_spills()
         return runs, pieces
 
     if sb.merge_algorithm == "rerank":
@@ -1319,6 +1580,7 @@ def _build_superblock(
             peak_candidates = _merge_path_runs(
                 store, runs + risk_pieces, sink, cap, sb.merge_tile,
                 cfg.use_pallas, refiner=refiner, frontier=frontier,
+                executor=pipe,
             )
         else:
             # every suffix was at risk: the re-ranked pieces already are
@@ -1343,6 +1605,7 @@ def _build_superblock(
             for p in risk_pieces:
                 sink.append(p)
     sa = sink.result()
+    t_merge = time.perf_counter() - t_merge0
     if sanitize_enabled(sb):
         check_footprint(store, backend)
 
@@ -1393,6 +1656,13 @@ def _build_superblock(
         "spilled_bytes": scratch.spilled_bytes if scratch else 0,
         "emit_lcp": bool(sb.emit_lcp),
         "sanitized": sanitize_enabled(sb),
+        "pipeline_depth": int(sb.pipeline_depth),
+        # phase wall-times: what each overlap in the pipelined schedule can
+        # hide behind (staging behind t_build_s, refill gathers inside
+        # t_merge_s) — benchmarks.build calibrates its throttle from these.
+        "t_stage_s": round(t_stage, 6),
+        "t_build_s": round(t_build, 6),
+        "t_merge_s": round(t_merge, 6),
     }
     res = SAResult(suffix_array=sa, footprint=fp, stats=stats, lcp=sink.lcp)
     if sb.write_manifest:

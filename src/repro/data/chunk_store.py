@@ -189,7 +189,14 @@ class ChunkedCorpusReader:
     Every read is positional (``os.pread``), so one reader can serve
     interleaved chunk and range requests without seek state; nothing is
     cached here — residency policy belongs to the caller (the store
-    backend's LRU).
+    backend's LRU).  Positional reads also make the reader safe under the
+    pipelined build's staging prefetch (``core/pipeline_exec.py``): the
+    background worker and the merge path can read through the same fd
+    concurrently without corrupting each other's offsets.  The *backend
+    cache above this reader* is not thread-safe — the pipeline keeps all
+    cache-touching calls on one thread at a time (store-quiescence
+    windows), which is why only ``stage_items``/``fetch_keys`` hand-offs
+    are prefetched.
     """
 
     def __init__(self, path: str):

@@ -62,6 +62,10 @@ def main():
     ap.add_argument("--merge-tile", type=int, default=0,
                     help="merge-path tile width (buffered heads per run; "
                          "0 = derive from the per-run record capacity)")
+    ap.add_argument("--pipeline-depth", type=int, default=1,
+                    help="background buffers for the pipelined build "
+                         "(staging prefetch, async spill/output writes, "
+                         "merge refill prefetch); 0 = fully synchronous")
     ap.add_argument("--store-backend", choices=["memory", "chunked"],
                     default="memory",
                     help="out-of-core merge store: host-resident corpus "
@@ -122,6 +126,7 @@ def main():
         spill_dir=args.index_dir,
         emit_lcp=bool(args.index_dir),
         write_manifest=bool(args.index_dir),
+        pipeline_depth=args.pipeline_depth,
     )
 
     source = corpus

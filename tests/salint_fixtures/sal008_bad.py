@@ -1,0 +1,20 @@
+"""BAD: raw background-work primitives outside core/pipeline_exec (SAL008 x5)."""
+import threading  # line 2: SAL008
+from concurrent.futures import ThreadPoolExecutor  # line 3: SAL008
+
+
+def spawn_spill(write, arr):
+    t = threading.Thread(target=write, args=(arr,))  # line 7: SAL008
+    t.start()
+    return t
+
+
+def spawn_pool(write, arrs):
+    pool = ThreadPoolExecutor(max_workers=1)  # line 13: SAL008
+    return [pool.submit(write, a) for a in arrs]
+
+
+def lazy_import_pool():
+    import concurrent.futures  # line 18: SAL008
+
+    return concurrent.futures

@@ -1,0 +1,20 @@
+"""GOOD: background work submitted through the sanctioned executor."""
+from repro.core.pipeline_exec import PipelineExecutor
+
+
+def spill_in_background(write, arrs):
+    with PipelineExecutor(depth=1, name="spill") as pipe:
+        tasks = [pipe.submit(write, a) for a in arrs]
+        return [t.result() for t in tasks]
+
+
+def overlapped_stage(stage, build, blocks):
+    out = []
+    with PipelineExecutor(depth=1, name="staging") as pipe:
+        nxt = pipe.submit(stage, blocks[0])
+        for i in range(len(blocks)):
+            block = nxt.result()
+            if i + 1 < len(blocks):
+                nxt = pipe.submit(stage, blocks[i + 1])
+            out.append(build(block))
+    return out

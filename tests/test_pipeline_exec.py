@@ -1,0 +1,341 @@
+"""Pipelined out-of-core build (ISSUE 8): executor semantics, fault
+injection, and pipelined == synchronous bit-identity.
+
+* :class:`~repro.core.pipeline_exec.PipelineExecutor` — FIFO ordering,
+  bounded-queue backpressure, original-type exception propagation through
+  ``result``/``drain``/``close``, idempotent close, context manager,
+  worker survival after a failed task.
+* Fault injection through the build — a store fault raised on the worker
+  (staging prefetch) or on the merge path propagates as its original type,
+  the worker thread is joined, ``_Scratch`` scratch files are removed, and
+  ``_OutputSink`` leaves no orphaned ``.tmp`` memmaps behind.
+* Property: ``pipeline_depth >= 1`` produces the bit-identical suffix
+  array (and identical store traffic) as ``pipeline_depth = 0`` on reads
+  and text corpora, both store backends, >= 3 superblocks, with the
+  sanitizer active — and the residency bound holds with the staging
+  prefetch resident.
+
+This file asserts thread-join behavior via ``threading.enumerate``, so the
+raw-threading rule is suppressed file-wide.
+"""
+# salint: disable-file=SAL008
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.config import SAConfig, SuperblockConfig
+from repro.core.oracle import doubling_sa_text, naive_sa_reads
+from repro.core.pipeline_exec import PipelineExecutor
+from repro.core.store import ChunkedFileBackend, StoreBackend
+from repro.core.superblock import _Scratch, build_suffix_array_superblock
+from repro.data.chunk_store import write_chunked_corpus
+
+CFG = SAConfig(vocab_size=4, chars_per_word=2, key_words=2)  # K=4
+
+
+# ---------------------------------------------------------------------------
+# executor semantics
+# ---------------------------------------------------------------------------
+
+
+def test_fifo_ordering_and_results():
+    order = []
+
+    def step(i):
+        time.sleep(0.01 if i % 2 else 0.0)  # uneven work, same order
+        order.append(i)
+        return i * i
+
+    with PipelineExecutor(depth=4) as pipe:
+        tasks = [pipe.submit(step, i) for i in range(8)]
+        assert [t.result() for t in tasks] == [i * i for i in range(8)]
+    assert order == list(range(8))
+
+
+def test_submit_blocks_when_queue_full():
+    with PipelineExecutor(depth=1) as pipe:
+        pipe.submit(time.sleep, 0.3)  # worker busy
+        pipe.submit(lambda: None)     # fills the depth-1 queue
+        t0 = time.perf_counter()
+        pipe.submit(lambda: None)     # must wait for the sleeper to finish
+        assert time.perf_counter() - t0 >= 0.2
+
+
+def test_result_timeout():
+    with PipelineExecutor(depth=1) as pipe:
+        t = pipe.submit(time.sleep, 0.5)
+        with pytest.raises(TimeoutError):
+            t.result(timeout=0.05)
+        assert t.result() is None  # still completes normally
+
+
+def test_exception_original_type_and_worker_survives():
+    def boom():
+        raise KeyError("injected")
+
+    pipe = PipelineExecutor(depth=2)
+    t = pipe.submit(boom)
+    with pytest.raises(KeyError, match="injected"):
+        t.result()
+    # the worker survives a failed task and keeps serving
+    assert pipe.submit(lambda: 41 + 1).result() == 42
+    pipe.close()  # the failure was observed via result(): close is clean
+
+
+def test_unobserved_exception_raises_from_drain_and_close():
+    def boom():
+        raise ValueError("unobserved")
+
+    pipe = PipelineExecutor(depth=2)
+    pipe.submit(boom)
+    with pytest.raises(ValueError, match="unobserved"):
+        pipe.drain()
+    pipe.close()  # drain observed it: close is clean
+
+    pipe = PipelineExecutor(depth=2)
+    pipe.submit(boom)
+    with pytest.raises(ValueError, match="unobserved"):
+        pipe.close()
+    assert not pipe.alive  # raised *after* joining the worker
+
+
+def test_close_is_idempotent_and_joins():
+    pipe = PipelineExecutor(depth=1)
+    pipe.submit(time.sleep, 0.05)
+    pipe.close()
+    assert not pipe.alive
+    pipe.close()  # second close is a no-op
+    with pytest.raises(RuntimeError):
+        pipe.submit(lambda: None)
+
+
+def test_context_manager_closes_and_depth_validated():
+    with PipelineExecutor(depth=1) as pipe:
+        assert pipe.alive
+    assert not pipe.alive
+    with pytest.raises(ValueError):
+        PipelineExecutor(depth=0)
+
+
+# ---------------------------------------------------------------------------
+# fault injection through the build
+# ---------------------------------------------------------------------------
+
+
+class _InjectedFault(RuntimeError):
+    """Distinct type: the build must re-raise exactly this, not a wrapper."""
+
+
+class _FaultyBackend(StoreBackend):
+    """Chunked backend that raises on the Nth call of one channel —
+    staging reads fail on the worker (prefetch), gathers on the merge."""
+
+    def __init__(self, inner, fail_read_at=None, fail_gather_at=None):
+        self.inner = inner
+        self.fail_read_at = fail_read_at
+        self.fail_gather_at = fail_gather_at
+        self.reads = 0
+        self.gathers = 0
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    @property
+    def resident_bytes(self):
+        return self.inner.resident_bytes
+
+    def read_items(self, lo, hi):
+        self.reads += 1
+        if self.fail_read_at is not None and self.reads >= self.fail_read_at:
+            raise _InjectedFault(f"read_items #{self.reads}")
+        # backend-shim delegation, same pattern as ThrottledBackend
+        return self.inner.read_items(lo, hi)  # salint: disable=SAL002
+
+    def gather(self, gidx, depth):
+        self.gathers += 1
+        if (self.fail_gather_at is not None
+                and self.gathers >= self.fail_gather_at):
+            raise _InjectedFault(f"gather #{self.gathers}")
+        return self.inner.gather(gidx, depth)  # salint: disable=SAL002
+
+    def close(self):
+        self.inner.close()
+
+
+def _no_pipeline_threads():
+    deadline = time.time() + 5.0
+    while time.time() < deadline:
+        if not any(t.name.startswith("sa-pipeline")
+                   for t in threading.enumerate()):
+            return True
+        time.sleep(0.01)
+    return False
+
+
+def _chunked(tmp_path, corpus):
+    p = str(tmp_path / "corpus.sachunk")
+    write_chunked_corpus(corpus, p, chunk_items=32)
+    return p
+
+
+def test_staging_fault_on_worker_propagates_and_joins(tmp_path):
+    """Block 2's stage runs as a prefetch on the worker; its failure must
+    surface as the original type at the hand-off, with the thread joined
+    and the scratch directory gone."""
+    rng = np.random.default_rng(0)
+    reads = rng.integers(1, 5, size=(96, 12)).astype(np.int32)
+    budget = reads.size * 4
+    be = _FaultyBackend(
+        ChunkedFileBackend(_chunked(tmp_path, reads), CFG,
+                           cache_budget_bytes=budget // 2),
+        fail_read_at=2,
+    )
+    spill = tmp_path / "out"
+    with pytest.raises(_InjectedFault):
+        build_suffix_array_superblock(be, cfg=CFG, sb=SuperblockConfig(
+            num_superblocks=4, cache_budget_bytes=budget,
+            pipeline_depth=1, spill_dir=str(spill)))
+    be.close()
+    assert _no_pipeline_threads()
+    # scratch removed, no partial outputs, no orphaned .tmp memmaps
+    leftovers = [f for f in os.listdir(str(spill))] if spill.exists() else []
+    assert leftovers == []
+
+
+def test_merge_fault_aborts_sink_no_orphan_tmp(tmp_path):
+    """A gather fault mid-merge: the output sink's ``.tmp`` memmaps are
+    unlinked, nothing is renamed into place, the worker is joined."""
+    rng = np.random.default_rng(1)
+    reads = rng.integers(1, 5, size=(96, 12)).astype(np.int32)
+    budget = reads.size * 4
+    be = _FaultyBackend(
+        ChunkedFileBackend(_chunked(tmp_path, reads), CFG,
+                           cache_budget_bytes=budget // 2),
+        fail_gather_at=3,
+    )
+    spill = tmp_path / "out"
+    with pytest.raises(_InjectedFault):
+        build_suffix_array_superblock(be, cfg=CFG, sb=SuperblockConfig(
+            num_superblocks=4, cache_budget_bytes=budget,
+            pipeline_depth=1, emit_lcp=True, spill_dir=str(spill)))
+    be.close()
+    assert _no_pipeline_threads()
+    leftovers = sorted(os.listdir(str(spill))) if spill.exists() else []
+    assert not any(f.endswith(".tmp") for f in leftovers), leftovers
+    assert "suffix_array.npy" not in leftovers  # never renamed into place
+    assert "lcp.npy" not in leftovers
+
+
+def test_spill_fault_on_worker_propagates(tmp_path, monkeypatch):
+    """A failing background spill write surfaces as its original type at
+    ``drain_spills`` (before any run is read back), worker joined."""
+    def bad_fill(out, arr):
+        raise _InjectedFault("spill write failed")
+
+    monkeypatch.setattr(_Scratch, "_fill", staticmethod(bad_fill))
+    rng = np.random.default_rng(2)
+    reads = rng.integers(1, 5, size=(96, 12)).astype(np.int32)
+    with pytest.raises(_InjectedFault):
+        build_suffix_array_superblock(
+            reads, cfg=CFG, sb=SuperblockConfig(
+                num_superblocks=4, store_backend="chunked",
+                cache_budget_bytes=reads.size * 4, pipeline_depth=1))
+    assert _no_pipeline_threads()
+
+
+# ---------------------------------------------------------------------------
+# pipelined == synchronous (bit-identity + residency), sanitizer active
+# ---------------------------------------------------------------------------
+
+
+def _build(corpus, depth, backend="chunked", blocks=4, budget=None):
+    sb = SuperblockConfig(
+        num_superblocks=blocks, store_backend=backend,
+        cache_budget_bytes=0 if budget is None else budget,
+        pipeline_depth=depth, sanitize=True,
+    )
+    return build_suffix_array_superblock(corpus, cfg=CFG, sb=sb)
+
+
+def _assert_identical(corpus, oracle, blocks, budget):
+    ref = _build(corpus, 0, budget=budget, blocks=blocks)
+    np.testing.assert_array_equal(ref.suffix_array, oracle)
+    for depth in (1, 2):
+        res = _build(corpus, depth, budget=budget, blocks=blocks)
+        np.testing.assert_array_equal(res.suffix_array, ref.suffix_array)
+        # overlap must not change store traffic, only its timing
+        assert (res.stats["merge_fetch_bytes"]
+                == ref.stats["merge_fetch_bytes"])
+        assert res.stats["pipeline_depth"] == depth
+        # residency: the prefetch layers (staging share <= budget/2,
+        # third refill buffer <= readahead share) add at most one budget
+        # of accounted bytes over the synchronous peak, at any scale —
+        # the tight <= budget bound at realistic budgets is asserted
+        # deterministically in test_residency_bound_with_prefetch
+        assert (0 < res.footprint.peak_resident_bytes
+                <= ref.footprint.peak_resident_bytes + budget)
+    mem_ref = _build(corpus, 0, backend="memory", blocks=blocks)
+    mem_pipe = _build(corpus, 1, backend="memory", blocks=blocks)
+    np.testing.assert_array_equal(mem_pipe.suffix_array, mem_ref.suffix_array)
+    np.testing.assert_array_equal(mem_pipe.suffix_array, oracle)
+
+
+@given(rows=st.integers(24, 48), rlen=st.integers(8, 12),
+       blocks=st.integers(3, 4), seed=st.integers(0, 10_000))
+@settings(max_examples=3, deadline=None)
+def test_pipelined_identical_reads(rows, rlen, blocks, seed):
+    rng = np.random.default_rng(seed)
+    reads = rng.integers(1, 5, size=(rows, rlen)).astype(np.int32)
+    _assert_identical(reads, naive_sa_reads(reads), blocks,
+                      budget=reads.size * 4 // 2)
+
+
+@given(n=st.integers(120, 360), blocks=st.integers(3, 4),
+       seed=st.integers(0, 10_000))
+@settings(max_examples=3, deadline=None)
+def test_pipelined_identical_text(n, blocks, seed):
+    rng = np.random.default_rng(seed)
+    text = rng.integers(1, 5, size=(n,)).astype(np.int32)
+    _assert_identical(text, doubling_sa_text(text), blocks,
+                      budget=text.size * 4 // 2)
+
+
+def test_residency_bound_with_prefetch():
+    """At a realistic budget (corpus/2) the residency bound holds with the
+    staging prefetch resident: one prefetched block is exactly the non-LRU
+    read-ahead share (budget/4 = corpus/4 here), so the bound is tight,
+    not vacuous — and the prefetch genuinely engaged."""
+    rng = np.random.default_rng(3)
+    reads = rng.integers(1, 5, size=(256, 16)).astype(np.int32)
+    budget = reads.size * 4 // 2
+    ref = _build(reads, 0, budget=budget)
+    res = _build(reads, 1, budget=budget)
+    np.testing.assert_array_equal(res.suffix_array, ref.suffix_array)
+    np.testing.assert_array_equal(res.suffix_array, naive_sa_reads(reads))
+    assert 0 < res.footprint.peak_resident_bytes <= budget
+
+
+def test_residency_bound_with_prefetch_text():
+    """Same tight bound on a streamed text corpus at the budget the
+    streaming acceptance tests use (corpus/4)."""
+    rng = np.random.default_rng(4)
+    text = rng.integers(1, 5, size=(1024,)).astype(np.int32)
+    budget = text.size * 4 // 4
+    ref = _build(text, 0, budget=budget)
+    res = _build(text, 1, budget=budget)
+    np.testing.assert_array_equal(res.suffix_array, ref.suffix_array)
+    np.testing.assert_array_equal(res.suffix_array, doubling_sa_text(text))
+    assert 0 < res.footprint.peak_resident_bytes <= budget
+
+
+def test_pipelined_identical_repetitive_text():
+    """Deep-tie worst case: fully repetitive text, pipelined vs sync."""
+    text = np.tile(np.array([1, 2], np.int32), 150)
+    ref = _build(text, 0, budget=text.size * 4 * 4)
+    pipe = _build(text, 1, budget=text.size * 4 * 4)
+    np.testing.assert_array_equal(pipe.suffix_array, ref.suffix_array)
+    np.testing.assert_array_equal(pipe.suffix_array, doubling_sa_text(text))

@@ -122,6 +122,28 @@ def test_sal007_exempts_tests_dirs(tmp_path):
     assert _check(d, "sal007_bad.py", R.Sal007DeprecatedWrapperCallers()) == []
 
 
+def test_sal008_bad_fixture(tmp_path):
+    vs = _check(tmp_path, "sal008_bad.py", R.Sal008ThreadsOutsideExecutor())
+    assert [(v.rule_id, v.line) for v in vs] == [
+        ("SAL008", 2), ("SAL008", 3), ("SAL008", 7), ("SAL008", 13),
+        ("SAL008", 18)]
+    assert "PipelineExecutor" in vs[0].message
+
+
+def test_sal008_good_fixture(tmp_path):
+    assert _check(tmp_path, "sal008_good.py",
+                  R.Sal008ThreadsOutsideExecutor()) == []
+
+
+def test_sal008_skips_pipeline_exec(tmp_path):
+    """The executor itself is the one sanctioned home of raw threads."""
+    d = tmp_path / "core"
+    d.mkdir()
+    vs = _check(d, "sal008_bad.py", R.Sal008ThreadsOutsideExecutor(),
+                dest_name="pipeline_exec.py")
+    assert vs == []
+
+
 # ---------------------------------------------------------------------------
 # SAL001: repo-level kernel registry pairing (fixture trees)
 # ---------------------------------------------------------------------------
@@ -218,7 +240,7 @@ def test_cli_list_rules(capsys):
     assert salint_main(["--list-rules"]) == 0
     out = capsys.readouterr().out
     for rid in ("SAL001", "SAL002", "SAL003", "SAL004", "SAL005", "SAL006",
-                "SAL007"):
+                "SAL007", "SAL008"):
         assert rid in out
 
 

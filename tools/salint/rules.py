@@ -1,4 +1,4 @@
-"""salint rules SAL001–SAL007: the repo's residency/kernel invariants.
+"""salint rules SAL001–SAL008: the repo's residency/kernel invariants.
 
 Each rule encodes one invariant the paper-reproduction's correctness or
 resource-accounting story depends on; ``python -m tools.salint --explain
@@ -511,6 +511,69 @@ class Sal007DeprecatedWrapperCallers(Rule):
                     f"locate_store) or SuffixArrayIndex")
 
 
+# ---------------------------------------------------------------------------
+# SAL008 — background work goes through core/pipeline_exec only
+# ---------------------------------------------------------------------------
+
+
+class Sal008ThreadsOutsideExecutor(Rule):
+    rule_id = "SAL008"
+    summary = ("threading / concurrent.futures usage outside "
+               "core/pipeline_exec.py (background work must go through "
+               "PipelineExecutor)")
+    rationale = (
+        "The pipelined build's invariants — deterministic join on every "
+        "exit path, original-exception propagation, FIFO write ordering, "
+        "and prefetch bytes accounted against cache_budget_bytes — are "
+        "properties of repro.core.pipeline_exec.PipelineExecutor, not of "
+        "threads in general.  A raw threading.Thread or ThreadPoolExecutor "
+        "elsewhere can outlive the build, swallow exceptions, reorder "
+        "writes, or hold unaccounted buffers resident.  Spawn background "
+        "work by submitting to a PipelineExecutor instead."
+    )
+
+    ALLOWED_FILES = ("core/pipeline_exec.py",)
+    MODULES: ClassVar[Set[str]] = {"threading", "concurrent", "concurrent.futures"}
+    CALLS: ClassVar[Set[str]] = {
+        "threading.Thread", "Thread",
+        "ThreadPoolExecutor", "ProcessPoolExecutor",
+        "concurrent.futures.ThreadPoolExecutor",
+        "concurrent.futures.ProcessPoolExecutor",
+        "futures.ThreadPoolExecutor", "futures.ProcessPoolExecutor",
+    }
+
+    def check(self, ctx: FileContext) -> Iterator[Violation]:
+        if ctx.endswith(*self.ALLOWED_FILES):
+            return
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    root = alias.name.split(".")[0]
+                    if alias.name in self.MODULES or root in ("threading",
+                                                              "concurrent"):
+                        yield violation_at(
+                            self.rule_id, ctx.path, node,
+                            f"import of '{alias.name}': background work goes "
+                            f"through repro.core.pipeline_exec."
+                            f"PipelineExecutor, not raw threads")
+            elif isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                if mod == "threading" or mod.startswith("concurrent"):
+                    yield violation_at(
+                        self.rule_id, ctx.path, node,
+                        f"import from '{mod}': background work goes through "
+                        f"repro.core.pipeline_exec.PipelineExecutor, not "
+                        f"raw threads")
+            elif isinstance(node, ast.Call):
+                name = dotted_name(node.func)
+                if name in self.CALLS:
+                    yield violation_at(
+                        self.rule_id, ctx.path, node,
+                        f"'{name}' spawns unmanaged background work: submit "
+                        f"to a repro.core.pipeline_exec.PipelineExecutor "
+                        f"instead")
+
+
 DEFAULT_RULES: Tuple[Rule, ...] = (
     Sal001KernelRegistry(),
     Sal002BackendReads(),
@@ -519,4 +582,5 @@ DEFAULT_RULES: Tuple[Rule, ...] = (
     Sal005UnownedHandles(),
     Sal006BypassedShim(),
     Sal007DeprecatedWrapperCallers(),
+    Sal008ThreadsOutsideExecutor(),
 )
