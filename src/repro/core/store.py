@@ -643,6 +643,25 @@ class CorpusStore:
             self._note_resident()
 
     # -- per-superblock staging --------------------------------------------
+    def stage_read(self, lo: int, hi: int) -> np.ndarray:
+        """The backend half of :meth:`stage_items`: stream the contiguous
+        item range ``[lo, hi)`` without touching any store counter.
+
+        This is the **worker-thread-safe** staging primitive: it only reads
+        (backends stream the range past their window cache), so the pipeline
+        worker may run it while the main thread owns the accounting state.
+        Every background ``stage_read`` must be paired with a main-thread
+        :meth:`note_staged` at the executor hand-off — salint SAL010 rejects
+        worker-context code that mutates the gated counters directly.
+        """
+        return self.backend.read_items(lo, hi)
+
+    def note_staged(self, lo: int, hi: int, nbytes: int) -> None:
+        """Main-thread accounting for one staged range (the other half of
+        :meth:`stage_items`, applied when a background stage is collected)."""
+        self.staged_items += int(hi - lo)
+        self.staged_bytes += int(nbytes)
+
     def stage_items(self, lo: int, hi: int) -> np.ndarray:
         """Materialize the contiguous item range ``[lo, hi)`` for in-core
         superblock construction.
@@ -653,10 +672,12 @@ class CorpusStore:
         ``staged_items`` / ``staged_bytes`` — separate from the merge's
         request/response counters, which measure only cross-superblock window
         traffic (the paper's "indexes move, raw data stays put" quantity).
+        Synchronous composition of :meth:`stage_read` + :meth:`note_staged`,
+        so the pipelined and synchronous paths account identically by
+        construction.
         """
-        out = self.backend.read_items(lo, hi)
-        self.staged_items += int(hi - lo)
-        self.staged_bytes += int(out.nbytes)
+        out = self.stage_read(lo, hi)
+        self.note_staged(lo, hi, out.nbytes)
         return out
 
     # -- raw gather ---------------------------------------------------------
@@ -682,6 +703,40 @@ class CorpusStore:
         self.peak_windows = max(self.peak_windows, m)
         return out
 
+    def gather_keys(self, gidx: np.ndarray, depth) -> Tuple[np.ndarray, np.ndarray]:
+        """The backend half of :meth:`fetch_keys`: capacity-chunked backend
+        gathers + key packing, **no counter or residency mutation**.
+
+        This is the worker-thread-safe fetch primitive the merge's refill
+        prefetch submits to the pipeline executor: the backend call pattern
+        (one ``gather`` per capacity chunk) is identical to the synchronous
+        path, but ``FetchStats`` accounting stays untouched — the collector
+        applies it on the main thread via :meth:`note_fetched` at the
+        hand-off (salint SAL010).
+        """
+        m = gidx.shape[0]
+        depth = np.broadcast_to(np.asarray(depth, np.int64), (m,))
+        win = np.zeros((m, self.k), np.int32)
+        for lo in range(0, m, self.request_capacity):
+            hi = min(lo + self.request_capacity, m)
+            win[lo:hi] = self.backend.gather(
+                np.asarray(gidx[lo:hi], np.int64), depth[lo:hi])
+        return pack_keys_np(win, self.cfg), (win == 0).any(axis=1)
+
+    def note_fetched(self, m: int) -> None:
+        """Main-thread accounting for ``m`` windows served by
+        :meth:`gather_keys`: same totals, round count, and peak tracking as
+        the synchronous :meth:`fetch_windows` loop."""
+        m = int(m)
+        if m <= 0:
+            return
+        self.rounds += -(-m // self.request_capacity)
+        self.requests += m
+        self.request_bytes += m * self.index_bytes
+        self.response_bytes += m * self.k * self.token_bytes
+        self.peak_windows = max(self.peak_windows, m)
+        self._note_resident()
+
     def fetch_keys(self, gidx: np.ndarray, depth) -> Tuple[np.ndarray, np.ndarray]:
         """Batched packed-key fetch: windows at ``depth`` packed to key words.
 
@@ -690,10 +745,13 @@ class CorpusStore:
         ``0``, i.e. the suffix ends inside it and every deeper window is
         all-zero.  One batched store round per capacity chunk (the merge-path
         tile driver's fetch primitive; byte accounting identical to
-        :meth:`fetch_windows`).
+        :meth:`fetch_windows`).  Synchronous composition of
+        :meth:`gather_keys` + :meth:`note_fetched`, so the pipelined refill
+        prefetch and this path account identically by construction.
         """
-        win = self.fetch_windows(gidx, depth)
-        return pack_keys_np(win, self.cfg), (win == 0).any(axis=1)
+        keys, ended = self.gather_keys(gidx, depth)
+        self.note_fetched(gidx.shape[0])
+        return keys, ended
 
     def rank_windows(self, keys: np.ndarray, gidx: np.ndarray) -> np.ndarray:
         """Output ranks of candidate rows under (key words..., global index).

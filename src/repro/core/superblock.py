@@ -69,7 +69,7 @@ import numpy as np
 from repro.config import SAConfig, SuperblockConfig
 from repro.core.lcp import lcp_from_sa, pairwise_lcp
 from repro.core.pipeline import DeviceRefiner, build_suffix_array
-from repro.core.pipeline_exec import PipelineExecutor
+from repro.core.pipeline_exec import PipelineExecutor, pipeline_point
 from repro.core.sanitize import (
     SanitizingBackend,
     SanitizingSink,
@@ -239,6 +239,7 @@ class _Scratch:
 
     def drain_spills(self) -> None:
         """Wait for in-flight spill writes (re-raises a worker failure)."""
+        pipeline_point("spill:drain")
         pending, self._pending = self._pending, []
         for task in pending:
             task.result()
@@ -766,6 +767,7 @@ class _OutputSink:
         m = int(piece.shape[0])
         if m == 0:
             return
+        pipeline_point("sink:append")
         if self._pair_lcp is not None:
             self._append_lcp(piece)
         if self._exec is not None:
@@ -1045,6 +1047,7 @@ def _merge_path_runs(
         # ---- refill: one batched store round for every run's new heads
         # (heads already prefetched into a tile's pending buffer are served
         # from there; only the remainder touches the store) ----
+        pipeline_point("merge:refill")
         needs = [t.need(tile) for t in tiles]
         flat = np.concatenate(needs)
         keys = ended = None
@@ -1126,19 +1129,22 @@ def _merge_path_runs(
         # ---- prefetch the next refill while this tile ranks ---------------
         # The store is quiescent during ranking (the Pallas kernel runs on
         # device, the numpy reference is a pure lexsort), so the background
-        # worker owns it for exactly this window: one batched depth-0
-        # fetch_keys for every run's next-possible window, collected below
-        # *before* emit (whose pair-LCP / audit traffic touches the store
-        # again).  Positions are served once either way — byte and request
-        # totals match the synchronous path.
+        # worker owns the *backend* for exactly this window: one batched
+        # depth-0 gather_keys — the unaccounted worker-safe half of
+        # fetch_keys — collected below *before* emit (whose pair-LCP /
+        # audit traffic touches the store again).  FetchStats accounting
+        # happens on the main thread at collection (note_fetched; salint
+        # SAL010), so positions are served and accounted once either way —
+        # byte and request totals match the synchronous path.
         pf_task = pf_needs = None
         if executor is not None:
             pf_needs = [t.prefetch_need(tile) for t in tiles]
             pf_flat = np.concatenate(pf_needs)
             if pf_flat.size:
-                pf_task = executor.submit(store.fetch_keys, pf_flat, 0)
+                pf_task = executor.submit(store.gather_keys, pf_flat, 0)
 
         # ---- rank the tile: merge-path diagonal ranks in one shot ---------
+        pipeline_point("merge:rank")
         cand_words = np.concatenate([t.words for t in live])
         if tie_col is not None:
             cand_words = np.concatenate([cand_words, tie_col[:, None]], axis=1)
@@ -1159,7 +1165,9 @@ def _merge_path_runs(
 
         # ---- collect the prefetched refill (store is ours again) ----------
         if pf_task is not None:
+            pipeline_point("merge:collect")
             pf_keys, pf_ended = pf_task.result()
+            store.note_fetched(pf_keys.shape[0])  # main-thread accounting
             off = 0
             for t, n in zip(tiles, pf_needs, strict=True):
                 t.admit_pending(pf_keys[off : off + n.size],
@@ -1168,6 +1176,7 @@ def _merge_path_runs(
             _account()
 
         # ---- emit everything below the safety horizon ---------------------
+        pipeline_point("merge:emit")
         bounds = np.cumsum([0, *(t.buffered for t in live)])
         emit_cnt = c
         for ti, t in enumerate(live):
@@ -1437,7 +1446,10 @@ def _build_superblock_phases(
                     break  # would overrun the budget share: stage it sync
                 store.add_frontier(reg)
                 pf_registered += reg
-            prefetched[j] = (pipe.submit(store.stage_items, blo, bhi), reg)
+            # the worker runs the unaccounted read half; staged_items/bytes
+            # are recorded on the main thread when the task is collected
+            # below (note_staged at the hand-off — salint SAL010)
+            prefetched[j] = (pipe.submit(store.stage_read, blo, bhi), reg)
 
     t_stage = t_build = 0.0
     for i, (lo, hi) in enumerate(blocks):
@@ -1445,7 +1457,9 @@ def _build_superblock_phases(
         entry = prefetched.pop(i, None)
         if entry is not None:
             task, reg = entry
+            pipeline_point("stage:collect")
             block = task.result()  # staged in the background, not cached
+            store.note_staged(lo, hi, block.nbytes)
             if reg:
                 store.add_frontier(-reg)
                 pf_registered -= reg
@@ -1454,6 +1468,7 @@ def _build_superblock_phases(
         _submit_stages(i + 1)  # overlap: next blocks stage while this builds
         t_stage += time.perf_counter() - t0
         t0 = time.perf_counter()
+        pipeline_point("build:block")
         if plan.text_mode:
             res = build_suffix_array(block, cfg=cfg, mesh=mesh)
             sa_b = res.suffix_array + lo

@@ -1,0 +1,40 @@
+"""BAD: worker-context writes read by main-context code unsynchronized
+(SAL009 x3: lines 15, 16, 32)."""
+
+
+class Prefetcher:
+    """Stages blocks on the worker but leaks progress through attributes."""
+
+    def __init__(self, executor, store):
+        self._exec = executor
+        self._store = store
+        self.staged = 0
+        self.last_block = None
+
+    def _stage(self, lo, hi):  # submitted: runs on the worker thread
+        self.staged += 1  # line 15: SAL009 (read at line 24 without a lock)
+        self.last_block = self._store.read(lo, hi)  # line 16: SAL009
+        return hi - lo
+
+    def stage_async(self, lo, hi):
+        return self._exec.submit(self._stage, lo, hi)
+
+    def progress(self):
+        # main thread: races the worker's writes above
+        return self.staged, self.last_block
+
+
+done_flag = False
+
+
+def _mark_done():  # submitted below: worker context
+    global done_flag
+    done_flag = True  # line 32: SAL009 (main reads the global at line 38)
+
+
+def run(executor, work):
+    task = executor.submit(_mark_done)
+    work()
+    while not done_flag:  # main thread: unsynchronized global read
+        pass
+    return task

@@ -1,0 +1,32 @@
+"""GOOD: worker results cross the thread boundary through the executor
+hand-off (PipelineTask.result) or under one lock on both sides."""
+import threading
+
+
+class Prefetcher:
+    """Stages blocks on the worker; progress flows through task results."""
+
+    def __init__(self, executor, store):
+        self._exec = executor
+        self._store = store
+        self._lock = threading.Lock()
+        self._staged = 0
+
+    def _stage(self, lo, hi):  # worker context
+        block = self._store.read(lo, hi)
+        with self._lock:
+            self._staged += 1
+        return block  # hand-off: the main thread gets it via result()
+
+    def stage_async(self, lo, hi):
+        return self._exec.submit(self._stage, lo, hi)
+
+    def progress(self):
+        with self._lock:  # same lock as the worker-side write
+            return self._staged
+
+
+def run(executor, work):
+    task = executor.submit(lambda: "done")
+    work()
+    return task.result()  # synchronized channel: no shared flag needed

@@ -1,0 +1,24 @@
+"""BAD: device calls and gated accounting from worker-context code
+(SAL010 x4: lines 12, 13, 14, 24)."""
+import jax.numpy as jnp
+
+
+class Stager:
+    def __init__(self, executor, store):
+        self._exec = executor
+        self._store = store
+
+    def _stage(self, lo, hi):  # submitted: runs on the worker thread
+        block = self._store.stage_items(lo, hi)  # line 12: SAL010
+        packed = jnp.asarray(block)  # line 13: SAL010 (device placement)
+        self._store.staged_bytes += 16  # line 14: SAL010 (gated counter)
+        return packed
+
+    def stage_async(self, lo, hi):
+        return self._exec.submit(self._stage, lo, hi)
+
+
+def prefetch(executor, store, flat):
+    # worker-side fetch *with accounting*: traffic counters become
+    # schedule-dependent, breaking the traffic-equality gate
+    return executor.submit(lambda: store.fetch_keys(flat, 0))  # line 24

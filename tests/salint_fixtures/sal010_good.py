@@ -1,0 +1,31 @@
+"""GOOD: the worker runs the pure host fetch half; device work and
+accounting happen on the main thread at the collection point."""
+import jax.numpy as jnp
+
+
+class Stager:
+    def __init__(self, executor, store):
+        self._exec = executor
+        self._store = store
+
+    def _stage(self, lo, hi):  # worker context: unaccounted backend read
+        return self._store.stage_read(lo, hi)
+
+    def stage_async(self, lo, hi):
+        return self._exec.submit(self._stage, lo, hi)
+
+    def collect(self, task, lo, hi):
+        block = task.result()  # main thread from here on
+        self._store.note_staged(lo, hi, block.nbytes)
+        return jnp.asarray(block)  # device placement after the hand-off
+
+
+def prefetch(executor, store, flat):
+    # worker runs the unaccounted gather; caller accounts at collection
+    return executor.submit(store.gather_keys, flat, 0)
+
+
+def collect(store, task, m):
+    keys, ended = task.result()
+    store.note_fetched(m)  # main-thread accounting, schedule-independent
+    return keys, ended

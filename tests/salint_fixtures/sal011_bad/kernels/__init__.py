@@ -1,0 +1,15 @@
+"""BAD kernel registry: signature drift, forked tuning default, missing
+op/ref defs (SAL011; see test_salint.py for the exact expected spans)."""
+from typing import NamedTuple
+
+
+class KernelSpec(NamedTuple):
+    module: str
+    op: str
+    ref: str
+
+
+KERNEL_REGISTRY = {
+    "foo": KernelSpec("foo", "foo_op", "foo_ref"),
+    "bar": KernelSpec("bar", "bar_op", "bar_ref"),  # line 14: op+ref missing
+}

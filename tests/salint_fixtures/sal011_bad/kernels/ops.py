@@ -1,0 +1,2 @@
+def foo_op(x, y, block: int = 256):  # line 1: tuning forked vs foo.py
+    return x + y

@@ -1,0 +1,2 @@
+def foo_ref(x):  # line 1: drops 'y' — signature drift vs foo_op(x, y)
+    return x

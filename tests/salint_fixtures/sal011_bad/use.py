@@ -1,0 +1,7 @@
+import numpy as np
+
+from .kernels import ops as kops
+
+
+def call_site(x):
+    return kops.foo_op(x.astype(np.int64), x)  # line 7: int64 cast

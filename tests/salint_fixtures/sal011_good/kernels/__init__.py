@@ -1,0 +1,14 @@
+"""GOOD kernel registry: op/ref/kernel signatures agree, tuning defaults
+match, call sites cast to int32."""
+from typing import NamedTuple
+
+
+class KernelSpec(NamedTuple):
+    module: str
+    op: str
+    ref: str
+
+
+KERNEL_REGISTRY = {
+    "foo": KernelSpec("foo", "foo_op", "foo_ref"),
+}

@@ -1,0 +1,2 @@
+def foo_op(x, y, block: int = 256, interpret: bool = True):
+    return x + y

@@ -1,0 +1,7 @@
+import numpy as np
+
+from .kernels import ops as kops
+
+
+def call_site(x):
+    return kops.foo_op(x.astype(np.int32), x)

@@ -29,7 +29,7 @@ from _hypothesis_compat import given, settings, st
 
 from repro.config import SAConfig, SuperblockConfig
 from repro.core.oracle import doubling_sa_text, naive_sa_reads
-from repro.core.pipeline_exec import PipelineExecutor
+from repro.core.pipeline_exec import PipelineExecutor, install_schedule_probe
 from repro.core.store import ChunkedFileBackend, StoreBackend
 from repro.core.superblock import _Scratch, build_suffix_array_superblock
 from repro.data.chunk_store import write_chunked_corpus
@@ -339,3 +339,210 @@ def test_pipelined_identical_repetitive_text():
     pipe = _build(text, 1, budget=text.size * 4 * 4)
     np.testing.assert_array_equal(pipe.suffix_array, ref.suffix_array)
     np.testing.assert_array_equal(pipe.suffix_array, doubling_sa_text(text))
+
+
+# ---------------------------------------------------------------------------
+# deterministic schedule exploration (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+
+class ScheduleExplorer:
+    """Deterministic scheduler probe: a *decision vector* assigns each
+    worker task (by submission ``seq``) a hold length — the number of
+    labeled pipeline points the main thread must pass before the task is
+    released from its ``before_task`` boundary. Holding the worker while
+    the main thread advances forces the adversarial interleavings a wall
+    clock almost never produces (staging prefetch completing after the
+    merge already refilled twice, spill landing mid-emit, ...).
+
+    Deadlock-free by construction: whenever the executor reports the main
+    thread blocking (``result``/``drain``/full-queue ``submit``/``close``)
+    every held task is released immediately — main can only make progress
+    through the worker at that point. A 20 s fail-safe releases anyway and
+    records a ``("timeout", seq)`` trace event; the suite asserts none
+    occur, so a hang in the protocol is a test failure, not a CI freeze.
+
+    The recorded trace is the interleaving's identity: distinct traces ==
+    distinct explored schedules. All internal state is guarded by one
+    condition variable — the probe itself must satisfy salint SAL009.
+    """
+
+    FAILSAFE_S = 20.0
+
+    def __init__(self, decisions):
+        self._decisions = list(decisions) or [0]
+        self._cond = threading.Condition()
+        self._points = 0          # labeled points main has passed
+        self._waiting = False     # main currently inside a blocking wait
+        self._trace = []
+        self._timeout_count = 0
+
+    # -- executor-facing hooks (protocol in pipeline_exec docstring) ----
+
+    def task_submitted(self, seq):
+        with self._cond:
+            self._trace.append(("submit", seq, self._points))
+
+    def before_task(self, seq):
+        with self._cond:
+            hold = self._decisions[seq % len(self._decisions)]
+            target = self._points + hold
+            deadline = time.monotonic() + self.FAILSAFE_S
+            while self._points < target and not self._waiting:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    self._timeout_count += 1
+                    self._trace.append(("timeout", seq))
+                    break
+                self._cond.wait(remaining)
+            self._trace.append(("run", seq, self._points))
+
+    def after_task(self, seq):
+        with self._cond:
+            self._trace.append(("done", seq, self._points))
+
+    def point(self, label):
+        with self._cond:
+            self._points += 1
+            self._trace.append(("pt", label))
+            self._cond.notify_all()
+
+    def main_blocked(self, where):
+        with self._cond:
+            self._waiting = True
+            self._trace.append(("blk", where))
+            self._cond.notify_all()
+
+    def main_unblocked(self):
+        with self._cond:
+            self._waiting = False
+
+    # -- harness-facing -------------------------------------------------
+
+    @property
+    def signature(self):
+        with self._cond:
+            return tuple(self._trace)
+
+    @property
+    def timeouts(self):
+        with self._cond:
+            return self._timeout_count
+
+
+_TRAFFIC_KEYS = ("merge_fetch_bytes", "merge_fetch_requests",
+                 "merge_fetch_rounds", "merge_retries",
+                 "spilled_bytes", "spilled_runs", "emitted")
+
+# Hold lengths per task slot, cycled over submission order. Mixes uniform
+# holds (every task delayed equally) with staggered vectors (adjacent
+# tasks released in inverted / skewed orders).
+_DECISION_VECTORS = (
+    [[d] for d in range(6)]
+    + [[0, 3], [2, 0], [2, 5], [5, 1], [4, 4], [1, 6], [3, 0], [6, 2]]
+    + [[0, 4, 1], [5, 0, 3], [2, 6, 0], [1, 4, 2], [6, 0, 0, 6]]
+)
+
+
+def _schedule_corpus():
+    rng = np.random.default_rng(7)
+    return rng.integers(1, 5, size=(48, 10)).astype(np.int32)
+
+
+def _explored_build(decisions, backend, reads, budget):
+    probe = ScheduleExplorer(decisions)
+    with install_schedule_probe(probe):
+        res = _build(reads, 1, backend=backend, blocks=3, budget=budget)
+    return res, probe
+
+
+def test_schedule_exploration_sweep():
+    """The acceptance gate: across >= 25 distinct interleavings, on both
+    store backends with the sanitizer armed, every explored schedule
+    yields the bit-identical suffix array, identical store-traffic
+    counters (the traffic-equality invariant SAL010 protects statically),
+    and chunked-backend residency within the cache budget. No run may
+    fall back to the fail-safe timeout."""
+    reads = _schedule_corpus()
+    oracle = naive_sa_reads(reads)
+    budget = reads.size * 4 // 2
+    signatures = set()
+    for backend in ("chunked", "memory"):
+        bud = budget if backend == "chunked" else None
+        ref = _build(reads, 1, backend=backend, blocks=3, budget=bud)
+        np.testing.assert_array_equal(ref.suffix_array, oracle)
+        for decisions in _DECISION_VECTORS:
+            res, probe = _explored_build(decisions, backend, reads, bud)
+            assert probe.timeouts == 0, probe.signature
+            np.testing.assert_array_equal(res.suffix_array, oracle)
+            for key in _TRAFFIC_KEYS:
+                assert res.stats[key] == ref.stats[key], (
+                    backend, decisions, key)
+            if backend == "chunked":
+                assert (0 < res.footprint.peak_resident_bytes <= budget), (
+                    decisions, res.footprint.peak_resident_bytes)
+            sig = probe.signature
+            assert any(e[0] == "pt" for e in sig)  # barriers engaged
+            signatures.add(sig)
+    assert len(signatures) >= 25, len(signatures)
+
+
+@given(decisions=st.lists(st.integers(0, 6), min_size=1, max_size=4),
+       seed=st.integers(0, 1000))
+@settings(max_examples=4, deadline=None)
+def test_schedule_exploration_property(decisions, seed):
+    """Hypothesis-driven: arbitrary decision vectors on fresh corpora
+    still produce the reference suffix array with unchanged traffic."""
+    rng = np.random.default_rng(seed)
+    reads = rng.integers(1, 5, size=(48, 10)).astype(np.int32)
+    budget = reads.size * 4 // 2
+    ref = _build(reads, 1, blocks=3, budget=budget)
+    np.testing.assert_array_equal(ref.suffix_array, naive_sa_reads(reads))
+    res, probe = _explored_build(decisions, "chunked", reads, budget)
+    assert probe.timeouts == 0
+    np.testing.assert_array_equal(res.suffix_array, ref.suffix_array)
+    for key in _TRAFFIC_KEYS:
+        assert res.stats[key] == ref.stats[key], (decisions, key)
+    assert 0 < res.footprint.peak_resident_bytes <= budget
+
+
+def test_exception_claim_atomic_under_holds():
+    """Regression for the SAL009 finding on PipelineTask: with the worker
+    held so the failure lands exactly while main blocks in ``result()``,
+    the exception is claimed once — ``result`` raises it, ``close`` does
+    not re-raise the observed failure."""
+    def boom():
+        raise KeyError("held-failure")
+
+    probe = ScheduleExplorer([3])
+    with install_schedule_probe(probe):
+        pipe = PipelineExecutor(depth=2)
+        t = pipe.submit(boom)
+        with pytest.raises(KeyError, match="held-failure"):
+            t.result()
+        assert pipe.submit(lambda: 41 + 1).result() == 42
+        pipe.close()  # observed via result(): clean
+    assert probe.timeouts == 0
+
+    # unobserved variant: the held failure must surface exactly once, from
+    # close(), after the worker is joined
+    probe = ScheduleExplorer([2, 0])
+    with install_schedule_probe(probe):
+        pipe = PipelineExecutor(depth=2)
+        pipe.submit(boom)
+        pipe.submit(lambda: None)
+        with pytest.raises(KeyError, match="held-failure"):
+            pipe.close()
+        assert not pipe.alive
+    assert probe.timeouts == 0
+
+
+def test_probe_nesting_refused():
+    probe = ScheduleExplorer([0])
+    with install_schedule_probe(probe):
+        with pytest.raises(RuntimeError, match="already installed"):
+            with install_schedule_probe(ScheduleExplorer([1])):
+                pass  # pragma: no cover
+    # and the outer exit cleared the slot: a fresh install works
+    with install_schedule_probe(ScheduleExplorer([0])):
+        pass

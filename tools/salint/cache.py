@@ -1,0 +1,85 @@
+"""Incremental result cache for the per-file salint pass.
+
+One JSON file per cache directory, shaped::
+
+    {"version": "<ruleset key>", "files": {path: {"hash": ..., "violations": [...]}}}
+
+The key hashes every active rule's id + summary plus a format-version
+constant, so editing a rule (or upgrading salint) invalidates the whole
+cache, and editing a file invalidates that file.  Only the *per-file*
+pass is cached: the project pass (SAL009-011) and repo pass (SAL001) are
+cross-file by nature — a change in file A can create a violation in
+untouched file B — so :func:`tools.salint.engine.run` always re-runs them
+over freshly parsed trees.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from typing import Dict, Iterable, List, Optional
+
+from tools.salint.engine import Rule, Violation
+
+# bump when the cache entry shape or engine semantics change
+_FORMAT_VERSION = "salint-cache-v1"
+_FILENAME = "salint-cache.json"
+
+
+def ruleset_key(rules: Iterable[Rule]) -> str:
+    h = hashlib.sha256(_FORMAT_VERSION.encode())
+    for rule in sorted(rules, key=lambda r: r.rule_id):
+        h.update(f"{rule.rule_id}\x00{rule.summary}\x00".encode())
+    return h.hexdigest()
+
+
+def _content_hash(source: str) -> str:
+    return hashlib.sha256(source.encode("utf-8")).hexdigest()
+
+
+class ResultCache:
+    """Load-on-open, save-on-demand per-file violation cache."""
+
+    def __init__(self, cache_dir: str, rules: Iterable[Rule]):
+        self.path = os.path.join(cache_dir, _FILENAME)
+        self.version = ruleset_key(rules)
+        self.hits = 0
+        self.misses = 0
+        self._files: Dict[str, dict] = {}
+        self._dirty = False
+        try:
+            with open(self.path, encoding="utf-8") as f:
+                data = json.load(f)
+            if data.get("version") == self.version:
+                self._files = data.get("files", {})
+        except (OSError, ValueError):
+            pass
+
+    def lookup(self, path: str, source: str) -> Optional[List[Violation]]:
+        entry = self._files.get(path)
+        if entry is None or entry.get("hash") != _content_hash(source):
+            self.misses += 1
+            return None
+        self.hits += 1
+        return [Violation(**v) for v in entry["violations"]]
+
+    def store(self, path: str, source: str,
+              violations: List[Violation]) -> None:
+        self._files[path] = {
+            "hash": _content_hash(source),
+            "violations": [vars(v) if not hasattr(v, "__dataclass_fields__")
+                           else {k: getattr(v, k)
+                                 for k in v.__dataclass_fields__}
+                           for v in violations],
+        }
+        self._dirty = True
+
+    def save(self) -> None:
+        if not self._dirty:
+            return
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        tmp = f"{self.path}.tmp"
+        with open(tmp, "w", encoding="utf-8") as f:
+            json.dump({"version": self.version, "files": self._files}, f)
+        os.replace(tmp, self.path)
+        self._dirty = False

@@ -3,9 +3,13 @@
 The analyzer is stdlib-``ast`` based and rule-driven: each rule is a class
 with an ID (``SALxxx``), a one-line summary, a rationale paragraph (served
 by ``--explain``), and a ``check`` that yields :class:`Violation` spans.
-Rules come in two shapes:
+Rules come in three shapes:
 
 * per-file rules — ``check(ctx)`` over one parsed file;
+* project rules — ``project_level = True``, ``check_project(graph)`` over a
+  :class:`tools.salint.graph.ProjectGraph` of every scanned file (the
+  interprocedural thread-context rules SAL009/SAL010 and the kernel
+  contract rule SAL011);
 * repo rules — ``repo_level = True``, ``check_repo(root)`` over repository
   structure (SAL001's kernel-registry pairing).
 
@@ -124,11 +128,16 @@ class Rule:
     summary = ""
     rationale = ""
     repo_level = False
+    project_level = False
 
     def check(self, ctx: FileContext) -> Iterator[Violation]:
         return iter(())
 
     def check_repo(self, root: str) -> Iterator[Violation]:
+        return iter(())
+
+    def check_project(self, graph) -> Iterator[Violation]:
+        """Project rules: ``graph`` is a tools.salint.graph.ProjectGraph."""
         return iter(())
 
 
@@ -148,40 +157,104 @@ def iter_py_files(paths: Sequence[str]) -> Iterator[str]:
                     yield os.path.join(dirpath, f)
 
 
-def check_file(path: str, rules: Iterable[Rule],
-               source: Optional[str] = None) -> List[Violation]:
-    """Run per-file rules over one file, suppressions applied."""
+def _parse_file(path: str, source: Optional[str] = None):
+    """-> (ctx, suppressions, error_violation) — ctx None on syntax error."""
     if source is None:
         with open(path, encoding="utf-8") as f:
             source = f.read()
     try:
         tree = ast.parse(source, filename=path)
     except SyntaxError as e:
-        return [Violation("SAL000", path, e.lineno or 1, (e.offset or 1) - 1,
-                          e.lineno or 1, e.offset or 1,
-                          f"syntax error: {e.msg}")]
+        err = Violation("SAL000", path, e.lineno or 1, (e.offset or 1) - 1,
+                       e.lineno or 1, e.offset or 1,
+                       f"syntax error: {e.msg}")
+        return None, Suppressions(source), err
     ctx = FileContext(path=path, tree=tree, source=source)
-    sup = Suppressions(source)
+    return ctx, Suppressions(source), None
+
+
+def _project_pass(ctxs: Sequence[FileContext], rules: Iterable[Rule],
+                  sups: Dict[str, Suppressions]) -> List[Violation]:
+    """Run every project rule over one graph of the scanned files."""
+    project_rules = [r for r in rules if r.project_level]
+    if not project_rules or not ctxs:
+        return []
+    from tools.salint.graph import ProjectGraph  # circular-import guard
+
+    graph = ProjectGraph(ctxs)
+    out: List[Violation] = []
+    for rule in project_rules:
+        for v in rule.check_project(graph):
+            sup = sups.get(v.path)
+            if sup is None:
+                sup = _suppressions_for(v.path)
+            if sup is None or not sup.is_suppressed(v):
+                out.append(v)
+    return out
+
+
+def check_file(path: str, rules: Iterable[Rule],
+               source: Optional[str] = None) -> List[Violation]:
+    """Run per-file *and* project rules over one file, suppressions applied
+    (the project graph is just this file — the shape the fixture tests use)."""
+    ctx, sup, err = _parse_file(path, source)
+    if ctx is None:
+        return [err]
     out = []
     for rule in rules:
-        if rule.repo_level:
+        if rule.repo_level or rule.project_level:
             continue
         for v in rule.check(ctx):
             if not sup.is_suppressed(v):
                 out.append(v)
+    out.extend(_project_pass([ctx], rules, {ctx.path: sup}))
     # ast.walk is breadth-first: restore source order for stable reporting
     out.sort(key=lambda v: (v.line, v.col, v.rule_id))
     return out
 
 
 def run(paths: Sequence[str], rules: Iterable[Rule],
-        root: Optional[str] = None) -> List[Violation]:
-    """Scan ``paths``; returns all unsuppressed violations, sorted."""
+        root: Optional[str] = None, cache=None) -> List[Violation]:
+    """Scan ``paths``; returns all unsuppressed violations, sorted.
+
+    ``cache`` (a :class:`tools.salint.cache.ResultCache`) memoizes the
+    *per-file* pass only, keyed on file content hash + rule-set version;
+    project and repo passes are cross-file by nature and always run.
+    """
     root = root or os.getcwd()
+    rules = list(rules)
     violations: List[Violation] = []
-    scanned = list(iter_py_files(paths))
-    for path in scanned:
-        violations.extend(check_file(path, rules))
+    ctxs: List[FileContext] = []
+    sups: Dict[str, Suppressions] = {}
+    file_rules = [r for r in rules if not r.repo_level and not r.project_level]
+    need_graph = any(r.project_level for r in rules)
+    scanned: List[str] = []
+    for path in iter_py_files(paths):
+        scanned.append(path)
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+        cached = cache.lookup(path, source) if cache is not None else None
+        if cached is not None and not need_graph:
+            violations.extend(cached)
+            continue
+        ctx, sup, err = _parse_file(path, source)
+        if ctx is None:
+            violations.append(err)
+            continue
+        ctxs.append(ctx)
+        sups[ctx.path] = sup
+        if cached is not None:
+            violations.extend(cached)
+            continue
+        per_file = []
+        for rule in file_rules:
+            for v in rule.check(ctx):
+                if not sup.is_suppressed(v):
+                    per_file.append(v)
+        if cache is not None:
+            cache.store(path, source, per_file)
+        violations.extend(per_file)
+    violations.extend(_project_pass(ctxs, rules, sups))
     # repo rules fire once, when the scan actually covers repo source
     # (a fixtures-only invocation from the tests must not drag them in)
     covers_src = any(
@@ -192,7 +265,9 @@ def run(paths: Sequence[str], rules: Iterable[Rule],
             if not rule.repo_level:
                 continue
             for v in rule.check_repo(root):
-                sup = _suppressions_for(v.path)
+                sup = sups.get(v.path)
+                if sup is None:
+                    sup = _suppressions_for(v.path)
                 if sup is None or not sup.is_suppressed(v):
                     violations.append(v)
     violations.sort(key=lambda v: (v.path, v.line, v.col, v.rule_id))

@@ -1,0 +1,343 @@
+"""salint project graph: per-function facts, call edges, thread contexts.
+
+This module is the interprocedural half of the analyzer.  It walks every
+scanned file once and produces one :class:`FunctionInfo` per function
+(methods, nested defs, lambdas, plus a ``<module>`` pseudo-function for
+module-level code), recording the facts the project rules need:
+
+* call edges (bare callee names — an over-approximate call graph);
+* attribute/global accesses, each tagged with whether a lock was held
+  (syntactically: inside a ``with`` whose context expression's last
+  dotted segment contains ``lock``/``cond``/``mutex``/``sem``);
+* callables handed to a :class:`PipelineExecutor` (``<executor>.submit(f)``
+  where the receiver name looks like an executor) or to
+  ``threading.Thread(target=f)``.
+
+From those facts :class:`ProjectGraph` infers **thread contexts**:
+
+* *worker roots* — every function whose name is passed to ``submit`` /
+  ``Thread(target=...)`` anywhere in the scanned set;
+* *worker context* — the closure of worker roots under call edges
+  (anything a submitted callable may transitively run on the worker);
+* *main context* — the closure of every function that is *not* a worker
+  root (worker roots re-enter the main context only when some main-side
+  function also calls them directly, e.g. ``stage_items`` calling
+  ``stage_read`` synchronously).
+
+Over-approximations (by design — soundness for SAL009/SAL010 means
+*flagging too much*, never too little; see docs/static_analysis.md):
+
+* call edges resolve by bare name: ``x.gather()`` targets every scanned
+  function named ``gather``, whatever class ``x`` is;
+* a function reachable from both a submit target and a normal call site
+  is in *both* contexts, so its shared state is checked both ways;
+* lock detection is syntactic — holding the *wrong* lock still counts as
+  locked (two different locks on the two sides is a real race this pass
+  cannot see; the schedule-exploration harness is the dynamic backstop).
+
+Under-approximations (documented, deliberate):
+
+* element stores (``self._out[lo:hi] = piece``) are not attribute writes:
+  filling a preallocated hand-off buffer is the sanctioned FIFO-ordered
+  pattern (``_OutputSink._write``, ``_Scratch._fill``);
+* calls through names that shadow builtins or common container/ndarray
+  methods (``get``, ``append``, ``set``, ...) are not resolved to project
+  functions — resolving them would wire ``queue.get()`` to any project
+  method that happens to be called ``get``.  Underscore-prefixed names
+  are always resolved.
+"""
+from __future__ import annotations
+
+import ast
+import builtins
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from tools.salint.engine import FileContext
+
+# Receiver-name fragments that mark `<recv>.submit(fn)` as an executor
+# hand-off (PipelineExecutor instances in this repo are held in names like
+# `executor`, `pipe`, `self._pool`, `self._exec`, `worker`); a serve-layer
+# `engine.submit(request)` does not match.
+EXECUTOR_HINTS: Tuple[str, ...] = ("exec", "pipe", "pool", "worker")
+
+# `with <expr>:` whose last dotted segment contains one of these counts as
+# holding a lock for the body.
+LOCK_HINTS: Tuple[str, ...] = ("lock", "cond", "mutex", "sem")
+
+# Bare callee names never resolved to project functions (builtin shadows and
+# ubiquitous container/queue/ndarray/str methods).  Underscore-prefixed
+# names are exempt from this list by construction.
+_SKIP_CALLEES: Set[str] = set(dir(builtins)) | {
+    "add", "append", "astype", "acquire", "clear", "copy", "decode",
+    "discard", "encode", "endswith", "extend", "fill", "flatten", "flush",
+    "format", "get", "group", "index", "insert", "is_set", "item", "items",
+    "join", "keys", "lower", "match", "move_to_end", "notify", "notify_all",
+    "pop", "popitem", "put", "put_nowait", "ravel", "read", "release",
+    "remove", "reshape", "search", "seek", "sleep", "split", "start",
+    "startswith", "strip", "squeeze", "task_done", "tell", "tolist",
+    "update", "upper", "values", "wait", "wait_for", "write",
+}
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, None otherwise."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+@dataclass
+class Access:
+    """One attribute or global access site inside a function body."""
+
+    attr: str
+    node: ast.AST
+    locked: bool
+
+
+@dataclass(eq=False)
+class FunctionInfo:
+    """Facts about one function body (identity-hashed: one per def site)."""
+
+    name: str  # bare name; "<module>" / "<lambda:L:C>" for pseudo-functions
+    qualname: str
+    cls: Optional[str]
+    path: str
+    node: ast.AST
+    # call edges and submit targets carry a resolution scope:
+    #   ("self", m)  — self.m(...): same-class methods first;
+    #   ("name", f)  — f(...): same-file definitions first;
+    #   ("attr", m)  — x.m(...): every scanned function named m.
+    calls: Set[Tuple[str, str]] = field(default_factory=set)
+    dotted_calls: List[Tuple[str, ast.Call]] = field(default_factory=list)
+    submit_targets: List[Tuple[str, str]] = field(default_factory=list)
+    self_writes: List[Access] = field(default_factory=list)
+    self_reads: List[Access] = field(default_factory=list)
+    attr_writes: List[Tuple[str, Access]] = field(default_factory=list)
+    attr_reads: List[Tuple[str, Access]] = field(default_factory=list)
+    global_writes: List[Access] = field(default_factory=list)
+    name_reads: Set[str] = field(default_factory=set)
+    declared_globals: Set[str] = field(default_factory=set)
+
+    @property
+    def lineno(self) -> int:
+        return getattr(self.node, "lineno", 1)
+
+
+def _is_lock_expr(expr: ast.AST) -> bool:
+    name = dotted(expr)
+    if name is None and isinstance(expr, ast.Call):
+        name = dotted(expr.func)  # with lock_factory(): / with self._lock():
+    if name is None:
+        return False
+    last = name.split(".")[-1].lower()
+    return any(h in last for h in LOCK_HINTS)
+
+
+def _lambda_name(node: ast.Lambda) -> str:
+    return f"<lambda:{node.lineno}:{node.col_offset}>"
+
+
+def _scoped(dn: str) -> Tuple[str, str]:
+    """(scope kind, bare name) for a dotted callee/target name."""
+    parts = dn.split(".")
+    if len(parts) == 1:
+        return "name", dn
+    if len(parts) == 2 and parts[0] == "self":
+        return "self", parts[1]
+    return "attr", parts[-1]
+
+
+def _target_name(arg: ast.AST) -> Optional[Tuple[str, str]]:
+    """Scoped name of a callable handed to submit/Thread(target=...)."""
+    if isinstance(arg, (ast.Name, ast.Attribute)):
+        dn = dotted(arg)
+        return _scoped(dn) if dn else (
+            ("attr", arg.attr) if isinstance(arg, ast.Attribute) else None)
+    if isinstance(arg, ast.Lambda):
+        return "name", _lambda_name(arg)
+    if isinstance(arg, ast.Call):  # functools.partial(fn, ...)
+        fname = dotted(arg.func) or ""
+        if fname.split(".")[-1] == "partial" and arg.args:
+            return _target_name(arg.args[0])
+    return None
+
+
+def _record_call(node: ast.Call, info: FunctionInfo) -> None:
+    dn = dotted(node.func)
+    if dn is not None:
+        info.dotted_calls.append((dn, node))
+        info.calls.add(_scoped(dn))
+    elif isinstance(node.func, ast.Attribute):
+        info.calls.add(("attr", node.func.attr))  # computed receiver
+    f = node.func
+    if isinstance(f, ast.Attribute) and f.attr == "submit":
+        recv = dotted(f.value) or ""
+        last = recv.split(".")[-1].lower()
+        if any(h in last for h in EXECUTOR_HINTS) and node.args:
+            target = _target_name(node.args[0])
+            if target is not None:
+                info.submit_targets.append(target)
+    elif dn in ("Thread", "threading.Thread"):
+        for kw in node.keywords:
+            if kw.arg == "target":
+                target = _target_name(kw.value)
+                if target is not None:
+                    info.submit_targets.append(target)
+
+
+def _record_attr(node: ast.Attribute, info: FunctionInfo, locked: bool) -> None:
+    recv = dotted(node.value)
+    acc = Access(node.attr, node, locked)
+    if recv == "self":
+        if isinstance(node.ctx, (ast.Store, ast.Del)):
+            info.self_writes.append(acc)
+        else:
+            info.self_reads.append(acc)
+    elif recv is not None:
+        if isinstance(node.ctx, (ast.Store, ast.Del)):
+            info.attr_writes.append((recv, acc))
+        else:
+            info.attr_reads.append((recv, acc))
+
+
+def _record_name(node: ast.Name, info: FunctionInfo, locked: bool) -> None:
+    if isinstance(node.ctx, (ast.Store, ast.Del)):
+        if info.name == "<module>" or node.id in info.declared_globals:
+            info.global_writes.append(Access(node.id, node, locked))
+    else:
+        info.name_reads.add(node.id)
+
+
+def _scan(node: ast.AST, info: FunctionInfo, cls: Optional[str],
+          locked: bool, infos: List[FunctionInfo], path: str) -> None:
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        qual = f"{cls}.{node.name}" if cls else node.name
+        child = FunctionInfo(node.name, qual, cls, path, node)
+        infos.append(child)
+        # decorators and defaults evaluate in the *enclosing* scope
+        for dec in node.decorator_list:
+            _scan(dec, info, cls, locked, infos, path)
+        for d in list(node.args.defaults) + list(node.args.kw_defaults):
+            if d is not None:
+                _scan(d, info, cls, locked, infos, path)
+        for stmt in node.body:
+            _scan(stmt, child, cls, False, infos, path)
+        return
+    if isinstance(node, ast.Lambda):
+        name = _lambda_name(node)
+        qual = f"{cls}.{name}" if cls else name
+        child = FunctionInfo(name, qual, cls, path, node)
+        infos.append(child)
+        _scan(node.body, child, cls, False, infos, path)
+        return
+    if isinstance(node, ast.ClassDef):
+        for dec in node.decorator_list:
+            _scan(dec, info, cls, locked, infos, path)
+        for base in list(node.bases) + [kw.value for kw in node.keywords]:
+            _scan(base, info, cls, locked, infos, path)
+        for stmt in node.body:
+            _scan(stmt, info, node.name, locked, infos, path)
+        return
+    if isinstance(node, (ast.With, ast.AsyncWith)):
+        body_locked = locked or any(
+            _is_lock_expr(item.context_expr) for item in node.items)
+        for item in node.items:
+            _scan(item.context_expr, info, cls, locked, infos, path)
+            if item.optional_vars is not None:
+                _scan(item.optional_vars, info, cls, locked, infos, path)
+        for stmt in node.body:
+            _scan(stmt, info, cls, body_locked, infos, path)
+        return
+    if isinstance(node, (ast.Global, ast.Nonlocal)):
+        info.declared_globals.update(node.names)
+        return
+    if isinstance(node, ast.Call):
+        _record_call(node, info)
+    elif isinstance(node, ast.Attribute):
+        _record_attr(node, info, locked)
+    elif isinstance(node, ast.Name):
+        _record_name(node, info, locked)
+    for child in ast.iter_child_nodes(node):
+        _scan(child, info, cls, locked, infos, path)
+
+
+def collect_file(ctx: FileContext) -> List[FunctionInfo]:
+    """All FunctionInfos for one parsed file (module pseudo-fn first)."""
+    infos: List[FunctionInfo] = []
+    module = FunctionInfo("<module>", "<module>", None, ctx.path, ctx.tree)
+    infos.append(module)
+    for stmt in ctx.tree.body:
+        _scan(stmt, module, None, False, infos, ctx.path)
+    return infos
+
+
+def _resolvable(name: str) -> bool:
+    return name.startswith("_") or name not in _SKIP_CALLEES
+
+
+class ProjectGraph:
+    """Scanned-set call graph + inferred thread contexts."""
+
+    def __init__(self, contexts: Sequence[FileContext]):
+        self.contexts = list(contexts)
+        self.functions: List[FunctionInfo] = []
+        for ctx in self.contexts:
+            self.functions.extend(collect_file(ctx))
+        self.by_name: Dict[str, List[FunctionInfo]] = defaultdict(list)
+        for fi in self.functions:
+            if fi.name != "<module>":
+                self.by_name[fi.name].append(fi)
+        roots: List[FunctionInfo] = []
+        for fi in self.functions:
+            for kind, name in fi.submit_targets:
+                roots.extend(self._resolve(fi, kind, name))
+        self.worker_roots: Set[FunctionInfo] = set(roots)
+        self.worker: Set[FunctionInfo] = self._closure(self.worker_roots)
+        main_roots = [fi for fi in self.functions
+                      if fi not in self.worker_roots]
+        self.main: Set[FunctionInfo] = self._closure(main_roots)
+
+    def _resolve(self, caller: FunctionInfo, kind: str,
+                 name: str) -> List[FunctionInfo]:
+        """Candidate definitions for one call edge, narrowest scope first:
+        same class for ``self.m``, same file for plain names, every scanned
+        definition otherwise (falling back outward when the narrow scope
+        has no definition — a base-class method, an imported function)."""
+        cands = self.by_name.get(name, [])
+        if kind == "self":
+            same = [c for c in cands if c.cls == caller.cls]
+            return same or cands
+        if kind == "name":
+            same = [c for c in cands if c.path == caller.path]
+            return same or cands
+        return cands
+
+    def _closure(self, roots: Iterable[FunctionInfo]) -> Set[FunctionInfo]:
+        seen: Set[FunctionInfo] = set(roots)
+        stack = list(seen)
+        while stack:
+            fi = stack.pop()
+            for kind, name in fi.calls:
+                if not _resolvable(name):
+                    continue
+                for target in self._resolve(fi, kind, name):
+                    if target not in seen:
+                        seen.add(target)
+                        stack.append(target)
+        return seen
+
+    def context_of(self, fi: FunctionInfo) -> str:
+        w, m = fi in self.worker, fi in self.main
+        if w and m:
+            return "both"
+        if w:
+            return "worker"
+        return "main" if m else "dead"

@@ -1,0 +1,80 @@
+"""salint output renderers: text (default), JSON, SARIF 2.1.0.
+
+SARIF is the GitHub code-scanning interchange format: the CI salint job
+uploads it so findings annotate the PR diff.  The renderers are pure
+(violations in, string out) so exit-code semantics stay in __main__.
+"""
+from __future__ import annotations
+
+import json
+from typing import Iterable, List, Sequence
+
+from tools.salint.engine import Rule, Violation
+
+SARIF_VERSION = "2.1.0"
+_SARIF_SCHEMA = ("https://raw.githubusercontent.com/oasis-tcs/sarif-spec/"
+                 "master/Schemata/sarif-schema-2.1.0.json")
+
+
+def render_text(violations: Sequence[Violation]) -> str:
+    return "\n".join(v.format() for v in violations)
+
+
+def render_json(violations: Sequence[Violation]) -> str:
+    return json.dumps(
+        {"violations": [
+            {k: getattr(v, k) for k in
+             ("rule_id", "path", "line", "col", "end_line", "end_col",
+              "message")}
+            for v in violations]},
+        indent=2, sort_keys=True)
+
+
+def render_sarif(violations: Sequence[Violation],
+                 rules: Iterable[Rule]) -> str:
+    rules = list(rules)
+    index = {r.rule_id: i for i, r in enumerate(rules)}
+    results: List[dict] = []
+    for v in violations:
+        result = {
+            "ruleId": v.rule_id,
+            "level": "error",
+            "message": {"text": v.message},
+            "locations": [{
+                "physicalLocation": {
+                    "artifactLocation": {
+                        "uri": v.path.replace("\\", "/"),
+                        "uriBaseId": "%SRCROOT%",
+                    },
+                    "region": {
+                        "startLine": v.line,
+                        "startColumn": v.col + 1,
+                        "endLine": v.end_line,
+                        "endColumn": v.end_col + 1,
+                    },
+                },
+            }],
+        }
+        if v.rule_id in index:
+            result["ruleIndex"] = index[v.rule_id]
+        results.append(result)
+    driver = {
+        "name": "salint",
+        "informationUri": "docs/static_analysis.md",
+        "rules": [
+            {
+                "id": r.rule_id,
+                "shortDescription": {"text": r.summary},
+                "fullDescription": {"text": r.rationale},
+                "defaultConfiguration": {"level": "error"},
+            }
+            for r in rules
+        ],
+    }
+    return json.dumps(
+        {
+            "$schema": _SARIF_SCHEMA,
+            "version": SARIF_VERSION,
+            "runs": [{"tool": {"driver": driver}, "results": results}],
+        },
+        indent=2, sort_keys=True)

@@ -574,6 +574,392 @@ class Sal008ThreadsOutsideExecutor(Rule):
                         f"instead")
 
 
+# ---------------------------------------------------------------------------
+# SAL009 — no unsynchronized state shared across thread contexts (project)
+# ---------------------------------------------------------------------------
+
+
+class Sal009CrossContextState(Rule):
+    rule_id = "SAL009"
+    summary = ("state written in worker context (code reachable from "
+               "PipelineExecutor.submit targets) and read in main context "
+               "must be lock-guarded on both sides or handed off through "
+               "the executor")
+    rationale = (
+        "The pipelined build's bit-identical claim rests on a strict "
+        "hand-off discipline: the worker thread communicates with the main "
+        "thread only through PipelineTask results and preallocated buffers "
+        "it was handed.  An instance attribute or module global written by "
+        "worker-context code and read by main-context code outside that "
+        "discipline is a data race — exactly the class of bug the "
+        "interprocedural pass exists to catch before the sharded store "
+        "multiplies the surface.  Guard both sides with one lock, or route "
+        "the value through the executor (submit returns a PipelineTask; its "
+        "result() is the synchronized channel).  The store layer itself "
+        "(core/store.py, data/chunk_store.py, core/sanitize.py) is exempt: "
+        "its backend cache mutations are the audited subject of the "
+        "schedule-exploration harness, which checks them dynamically."
+    )
+    project_level = True
+
+    ALLOWED_FILES = ("core/store.py", "data/chunk_store.py",
+                     "core/sanitize.py")
+
+    def check_project(self, graph) -> Iterator[Violation]:
+        # (class, attr) -> [(reader fn, access)] over main-context methods,
+        # plus private attrs read through any receiver (``task._exc`` from
+        # drain() is the same shared state as ``self._exc`` from result())
+        attr_readers: Dict[Tuple[Optional[str], str], List] = {}
+        private_readers: Dict[str, List] = {}
+        name_readers: Dict[str, List] = {}
+        for fi in graph.main:
+            for acc in fi.self_reads:
+                attr_readers.setdefault((fi.cls, acc.attr), []).append(
+                    (fi, acc))
+            for recv, acc in fi.attr_reads:
+                if recv not in ("self", "cls") and acc.attr.startswith("_"):
+                    private_readers.setdefault(acc.attr, []).append(
+                        (fi, acc))
+            for name in fi.name_reads:
+                name_readers.setdefault(name, []).append(fi)
+        for fi in sorted(graph.worker, key=lambda f: (f.path, f.lineno)):
+            if _endswith(fi.path, self.ALLOWED_FILES):
+                continue
+            for acc in fi.self_writes:
+                reads = list(attr_readers.get((fi.cls, acc.attr), ()))
+                if acc.attr.startswith("_"):
+                    reads += private_readers.get(acc.attr, ())
+                reads = [(o, a) for o, a in reads if o is not fi]
+                if not reads:
+                    continue
+                if acc.locked and all(a.locked for _o, a in reads):
+                    continue
+                reader, racc = min(
+                    reads, key=lambda oa: (oa[0].path, oa[1].node.lineno))
+                where = f"{reader.path}:{racc.node.lineno}"
+                yield violation_at(
+                    self.rule_id, fi.path, acc.node,
+                    f"'{fi.qualname}' runs in worker context and writes "
+                    f"'self.{acc.attr}', which main-context code reads at "
+                    f"{where} without a lock on both sides; hand the value "
+                    f"off through the executor (PipelineTask.result) or "
+                    f"guard both sides with one lock")
+            for acc in fi.global_writes:
+                readers = [o for o in name_readers.get(acc.attr, ())
+                           if o is not fi and o.path == fi.path]
+                if not readers or acc.locked:
+                    continue
+                reader = min(readers, key=lambda o: (o.path, o.lineno))
+                yield violation_at(
+                    self.rule_id, fi.path, acc.node,
+                    f"'{fi.qualname}' runs in worker context and writes "
+                    f"global '{acc.attr}', which main-context code "
+                    f"('{reader.qualname}') reads; globals cross the thread "
+                    f"hand-off unsynchronized — use the executor hand-off "
+                    f"or a lock")
+
+
+def _endswith(path: str, suffixes: Tuple[str, ...]) -> bool:
+    posix = path.replace(os.sep, "/")
+    return any(posix.endswith(s) for s in suffixes)
+
+
+# ---------------------------------------------------------------------------
+# SAL010 — no device work or gated accounting in worker context (project)
+# ---------------------------------------------------------------------------
+
+
+class Sal010WorkerDeviceAccounting(Rule):
+    rule_id = "SAL010"
+    summary = ("worker-context code must not issue jax/device calls or "
+               "mutate gated traffic counters (FetchStats accounting stays "
+               "on the main thread)")
+    rationale = (
+        "benchmarks/build.py gates the pipelined build on *traffic "
+        "equality*: the overlapped schedule must issue exactly the requests "
+        "and bytes of the synchronous one, with accounting mutated only "
+        "between pipeline points on the main thread.  A worker-context "
+        "jnp/jax/kops call races the main thread's device stream (and can "
+        "deadlock single-device platforms); a worker-context write to a "
+        "gated counter (requests, request_bytes, response_bytes, rounds, "
+        "retries, peak_windows, staged_items, staged_bytes, frontier_bytes, "
+        "peak_resident_bytes) or call to an accounting entry point "
+        "(note_staged/note_fetched/add_frontier/stage_items/fetch_keys/"
+        "fetch_windows/mget_window_host) makes the counters "
+        "schedule-dependent.  Split the work: the worker runs the pure "
+        "fetch half (stage_read/gather_keys), the main thread accounts at "
+        "the collection point (note_staged/note_fetched)."
+    )
+    project_level = True
+
+    DEVICE_PREFIXES: ClassVar[Tuple[str, ...]] = (
+        "jax.", "jnp.", "lax.", "kops.")
+    DEVICE_BARE: ClassVar[Set[str]] = {
+        "block_until_ready", "device_put", "device_get"}
+    GATED: ClassVar[Set[str]] = {
+        "requests", "request_bytes", "response_bytes", "rounds", "retries",
+        "peak_windows", "staged_items", "staged_bytes", "frontier_bytes",
+        "peak_resident_bytes"}
+    ACCOUNTING: ClassVar[Set[str]] = {
+        "note_staged", "note_fetched", "add_frontier", "_note_resident",
+        "stage_items", "fetch_windows", "fetch_keys", "mget_window_host"}
+
+    def check_project(self, graph) -> Iterator[Violation]:
+        for fi in sorted(graph.worker, key=lambda f: (f.path, f.lineno)):
+            for dn, node in fi.dotted_calls:
+                last = dn.split(".")[-1]
+                if dn.startswith(self.DEVICE_PREFIXES) \
+                        or last in self.DEVICE_BARE:
+                    yield violation_at(
+                        self.rule_id, fi.path, node,
+                        f"'{fi.qualname}' runs in worker context but calls "
+                        f"'{dn}': device work must stay on the main thread "
+                        f"(the worker runs the pure host fetch half)")
+                elif last in self.ACCOUNTING:
+                    yield violation_at(
+                        self.rule_id, fi.path, node,
+                        f"'{fi.qualname}' runs in worker context but calls "
+                        f"accounting entry point '{dn}': traffic counters "
+                        f"must be mutated on the main thread at the "
+                        f"collection point (note_staged/note_fetched)")
+            for acc in fi.self_writes:
+                if acc.attr in self.GATED:
+                    yield violation_at(
+                        self.rule_id, fi.path, acc.node,
+                        f"'{fi.qualname}' runs in worker context but "
+                        f"mutates gated counter 'self.{acc.attr}': the "
+                        f"traffic-equality gate assumes main-thread "
+                        f"accounting")
+            for recv, acc in fi.attr_writes:
+                if acc.attr in self.GATED:
+                    yield violation_at(
+                        self.rule_id, fi.path, acc.node,
+                        f"'{fi.qualname}' runs in worker context but "
+                        f"mutates gated counter '{recv}.{acc.attr}': the "
+                        f"traffic-equality gate assumes main-thread "
+                        f"accounting")
+
+
+# ---------------------------------------------------------------------------
+# SAL011 — kernel registry contract: signatures, tuning constants, dtypes
+# ---------------------------------------------------------------------------
+
+
+class Sal011KernelContract(Rule):
+    rule_id = "SAL011"
+    summary = ("every KERNEL_REGISTRY entry has kernel/op/ref signature "
+               "parity (tuning params aside), matching int tile/block "
+               "defaults, and int32-cast arguments at call sites")
+    rationale = (
+        "SAL001 checks that every kernel *has* a reference; SAL011 checks "
+        "that the pair still agrees: the ops wrapper, the Pallas kernel "
+        "entry point, and the ref must take the same parameters in the "
+        "same order (tuning knobs block/tile/interpret aside), the tuning "
+        "defaults declared by the wrapper must equal the kernel module's "
+        "(a silent block-size fork makes the sweep test a lie), and "
+        "explicit dtype casts at kops call sites must be int32 — the "
+        "packed-key pipeline is int32 lanes end to end, and an int64 cast "
+        "silently doubles device traffic.  Catching this statically turns "
+        "kernel<->ref drift from a sweep-test failure into a lint line."
+    )
+    project_level = True
+
+    TUNING: ClassVar[Set[str]] = {"block", "tile", "interpret"}
+
+    def __init__(self, kernels_pkg: str = "kernels"):
+        # path fragment locating the kernel package inside the scanned set;
+        # fixture trees override it (e.g. "sal011_bad/kernels")
+        self.kernels_pkg = kernels_pkg.rstrip("/")
+
+    def check_project(self, graph) -> Iterator[Violation]:
+        init = self._ctx(graph, "__init__.py")
+        if init is None:
+            return
+        entries = self._parse_registry(init)
+        if not entries:
+            return
+        ops_ctx = self._ctx(graph, "ops.py")
+        ref_ctx = self._ctx(graph, "ref.py")
+        ops_defs = _top_level_defs(ops_ctx)
+        ref_defs = _top_level_defs(ref_ctx)
+        op_names = {triple[1] for _node, triple in entries.values()}
+
+        for key, (key_node, (module, op, ref)) in sorted(
+                (k, (v[0], v[1])) for k, v in entries.items()):
+            op_def = ops_defs.get(op)
+            ref_def = ref_defs.get(ref)
+            mod_ctx = self._ctx(graph, f"{module}.py")
+            mod_def = _top_level_defs(mod_ctx).get(op)
+            if ops_ctx is not None and op_def is None:
+                yield violation_at(
+                    self.rule_id, init.path, key_node,
+                    f"registry entry '{key}' names op '{op}' which is not "
+                    f"defined in {self.kernels_pkg}/ops.py")
+            if ref_ctx is not None and ref_def is None:
+                yield violation_at(
+                    self.rule_id, init.path, key_node,
+                    f"registry entry '{key}' names ref '{ref}' which is "
+                    f"not defined in {self.kernels_pkg}/ref.py")
+            if mod_ctx is not None and mod_def is None:
+                yield violation_at(
+                    self.rule_id, mod_ctx.path, mod_ctx.tree,
+                    f"kernel module '{module}.py' defines no entry point "
+                    f"'{op}' (the registry pairs module and op by name)")
+            if op_def is not None and ref_def is not None:
+                a, b = self._sig(op_def), self._sig(ref_def)
+                if a != b:
+                    yield violation_at(
+                        self.rule_id, ref_ctx.path, ref_def,
+                        f"'{ref}{tuple(b)}' does not match op "
+                        f"'{op}{tuple(a)}' (tuning params aside): the "
+                        f"sweep cannot call them interchangeably")
+            if op_def is not None and mod_def is not None:
+                a, b = self._sig(op_def), self._sig(mod_def)
+                if a != b:
+                    yield violation_at(
+                        self.rule_id, mod_ctx.path, mod_def,
+                        f"kernel entry '{op}{tuple(b)}' does not match its "
+                        f"ops wrapper '{op}{tuple(a)}' (tuning params "
+                        f"aside)")
+                for name, default in self._tuning(op_def).items():
+                    kd = self._tuning(mod_def).get(name)
+                    if kd is not None and kd != default:
+                        yield violation_at(
+                            self.rule_id, ops_ctx.path, op_def,
+                            f"op '{op}' declares {name}={default} but "
+                            f"kernel module '{module}.py' declares "
+                            f"{name}={kd}: tuning defaults forked")
+
+        yield from self._check_call_sites(graph, op_names)
+
+    # -- helpers ---------------------------------------------------------
+
+    def _ctx(self, graph, basename: str):
+        tail = f"{self.kernels_pkg}/{basename}"
+        for ctx in graph.contexts:
+            if ctx.posix_path.endswith(tail):
+                return ctx
+        return None
+
+    def _parse_registry(self, ctx):
+        """{key: (key node, (module, op, ref))} from KERNEL_REGISTRY."""
+        out = {}
+        for node in ast.walk(ctx.tree):
+            targets = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                targets = [node.target]
+            for t in targets:
+                if not (isinstance(t, ast.Name) and t.id == "KERNEL_REGISTRY"
+                        and isinstance(node.value, ast.Dict)):
+                    continue
+                for k, v in zip(node.value.keys, node.value.values,
+                                strict=True):
+                    if not (isinstance(k, ast.Constant)
+                            and isinstance(k.value, str)):
+                        continue
+                    triple = self._triple(v)
+                    if triple is not None:
+                        out[k.value] = (k, triple)
+        return out
+
+    @staticmethod
+    def _triple(value: ast.AST) -> Optional[Tuple[str, str, str]]:
+        """(module, op, ref) from KernelSpec(...)/tuple, None if dynamic."""
+        args: List[ast.expr] = []
+        kw: Dict[str, str] = {}
+        if isinstance(value, ast.Call):
+            args = value.args
+            for k in value.keywords:
+                if isinstance(k.value, ast.Constant) and k.arg:
+                    kw[k.arg] = k.value.value
+        elif isinstance(value, (ast.Tuple, ast.List)):
+            args = value.elts
+        pos = [a.value for a in args
+               if isinstance(a, ast.Constant) and isinstance(a.value, str)]
+        fields = ("module", "op", "ref")
+        got = {f: kw.get(f) for f in fields}
+        for f, v in zip(fields, pos):
+            if got[f] is None:
+                got[f] = v
+        if all(got[f] is not None for f in fields):
+            return got["module"], got["op"], got["ref"]
+        return None
+
+    def _sig(self, fn: ast.AST) -> List[str]:
+        args = fn.args
+        names = [a.arg for a in args.posonlyargs + args.args
+                 + args.kwonlyargs]
+        return [n for n in names if n not in self.TUNING]
+
+    def _tuning(self, fn: ast.AST) -> Dict[str, int]:
+        """tuning param -> int literal default (non-int defaults skipped)."""
+        args = fn.args
+        named = args.posonlyargs + args.args
+        out: Dict[str, int] = {}
+        for a, d in zip(reversed(named), reversed(args.defaults)):
+            if a.arg in self.TUNING and isinstance(d, ast.Constant) \
+                    and type(d.value) is int:
+                out[a.arg] = d.value
+        for a, d in zip(args.kwonlyargs, args.kw_defaults):
+            if d is not None and a.arg in self.TUNING \
+                    and isinstance(d, ast.Constant) and type(d.value) is int:
+                out[a.arg] = d.value
+        return out
+
+    def _check_call_sites(self, graph, op_names: Set[str]):
+        for ctx in graph.contexts:
+            for node in ast.walk(ctx.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                f = node.func
+                if not (isinstance(f, ast.Attribute)
+                        and isinstance(f.value, ast.Name)
+                        and f.value.id in ("kops", "ops")
+                        and f.attr in op_names):
+                    continue
+                for arg in node.args:
+                    bad = self._bad_cast(arg)
+                    if bad is not None:
+                        yield violation_at(
+                            self.rule_id, ctx.path, arg,
+                            f"argument to '{f.value.id}.{f.attr}' is cast "
+                            f"to '{bad}': the packed-key pipeline is int32 "
+                            f"lanes end to end")
+
+    @staticmethod
+    def _bad_cast(arg: ast.AST) -> Optional[str]:
+        """dtype name when ``arg`` is an explicit non-int32 cast."""
+        dtype_node = None
+        if isinstance(arg, ast.Call):
+            name = dotted_name(arg.func) or ""
+            last = name.split(".")[-1]
+            if last == "astype" and arg.args:
+                dtype_node = arg.args[0]
+            elif last in ("asarray", "array", "full", "zeros", "ones"):
+                if len(arg.args) >= 2:
+                    dtype_node = arg.args[1]
+                for kwd in arg.keywords:
+                    if kwd.arg == "dtype":
+                        dtype_node = kwd.value
+        if dtype_node is None:
+            return None
+        dname = dotted_name(dtype_node) or (
+            dtype_node.value if isinstance(dtype_node, ast.Constant) else "")
+        if isinstance(dname, str) and dname \
+                and not dname.split(".")[-1].endswith("int32"):
+            return dname
+        return None
+
+
+def _top_level_defs(ctx) -> Dict[str, ast.AST]:
+    if ctx is None:
+        return {}
+    return {n.name: n for n in ctx.tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
 DEFAULT_RULES: Tuple[Rule, ...] = (
     Sal001KernelRegistry(),
     Sal002BackendReads(),
@@ -583,4 +969,7 @@ DEFAULT_RULES: Tuple[Rule, ...] = (
     Sal006BypassedShim(),
     Sal007DeprecatedWrapperCallers(),
     Sal008ThreadsOutsideExecutor(),
+    Sal009CrossContextState(),
+    Sal010WorkerDeviceAccounting(),
+    Sal011KernelContract(),
 )
