@@ -1,0 +1,144 @@
+"""Checksum overhead gate (ISSUE 10): integrity verification must be cheap
+enough to leave on by default.
+
+The same disk-streamed corpus is built twice at identical config — once
+over the verifying chunked backend (per-chunk crc32 checked on every LRU
+chunk load, the default) and once with ``verify=False`` — and the walls are
+compared:
+
+* both runs produce the **identical suffix array** (bit-for-bit; checksum
+  verification must be a pure observer);
+* the verified build's wall time may exceed the unverified one by at most
+  ``max_overhead_pct`` percent plus a small absolute slack for timer noise
+  (both runs are repeated and the per-variant minimum is compared, so the
+  gate measures the checksum work, not host-load jitter).
+
+A second, ungated family of rows records the serving-side posture: a
+``save_index`` -> ``open_index(verify="eager")`` round trip (whole-file
+crc32 of every artifact before the open returns) vs ``verify="off"``,
+plus the journaled (``resume=True``) build vs the plain one — the journal
+fsyncs a record per spilled run, so its cost rides the same report.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.config import SAConfig, SuperblockConfig
+from repro.core import index_io
+from repro.core.store import ChunkedFileBackend
+from repro.core.superblock import build_suffix_array_superblock
+from repro.data.chunk_store import write_chunked_corpus
+from repro.data.corpus import synth_dna_reads
+
+
+def _build(path, cfg, budget, superblocks, verify):
+    backend = ChunkedFileBackend(path, cfg, cache_budget_bytes=budget // 2,
+                                 verify=verify)
+    sb = SuperblockConfig(num_superblocks=superblocks,
+                          store_backend="chunked",
+                          cache_budget_bytes=budget)
+    t0 = time.perf_counter()
+    try:
+        res = build_suffix_array_superblock(backend, cfg=cfg, sb=sb)
+    finally:
+        backend.close()
+    return res, time.perf_counter() - t0
+
+
+def run(csv=True, max_overhead_pct=5.0, wall_slack_s=0.25, repeats=3,
+        superblocks=4):
+    cfg = SAConfig(vocab_size=4, packing="base")
+    corpus = synth_dna_reads(256, 24, seed=13)
+    budget = int(corpus.size) * 4
+    rows = []
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "corpus.sachunk")
+        write_chunked_corpus(corpus, path, chunk_items=64)
+        _build(path, cfg, budget, superblocks, True)  # warm jit caches
+        walls = {True: [], False: []}
+        res = {}
+        for _ in range(repeats):
+            for verify in (True, False):
+                r, t = _build(path, cfg, budget, superblocks, verify)
+                walls[verify].append(t)
+                res[verify] = r
+        if not np.array_equal(np.asarray(res[True].suffix_array),
+                              np.asarray(res[False].suffix_array)):
+            raise AssertionError(
+                "integrity regression: verified build's SA differs from the "
+                "unverified build (checksumming must be a pure observer)")
+        t_on, t_off = min(walls[True]), min(walls[False])
+        overhead_pct = 100.0 * (t_on - t_off) / max(t_off, 1e-9)
+        if t_on > t_off * (1.0 + max_overhead_pct / 100.0) + wall_slack_s:
+            raise AssertionError(
+                f"integrity regression: checksummed build {t_on:.2f}s vs "
+                f"unverified {t_off:.2f}s ({overhead_pct:.1f}% > "
+                f"{max_overhead_pct}% + {wall_slack_s}s slack)")
+        rows.append(dict(
+            case="build", verified_s=t_on, unverified_s=t_off,
+            overhead_pct=overhead_pct, gated=True,
+            suffixes=int(np.asarray(res[True].suffix_array).shape[0])))
+
+        # serving posture: eager whole-file digests vs no verification
+        ix = os.path.join(d, "ix")
+        backend = ChunkedFileBackend(path, cfg,
+                                     cache_budget_bytes=budget // 2)
+        index_io.save_index(ix, cfg, backend,
+                            np.asarray(res[True].suffix_array))
+        backend.close()
+        opens = {}
+        for mode in ("eager", "off"):
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                b, sa, lcp, _m = index_io.open_index(ix, verify=mode)
+                b.close()
+            opens[mode] = (time.perf_counter() - t0) / repeats
+        rows.append(dict(case="open_index", verified_s=opens["eager"],
+                         unverified_s=opens["off"],
+                         overhead_pct=100.0 * (opens["eager"] - opens["off"])
+                         / max(opens["off"], 1e-9),
+                         gated=False,
+                         suffixes=int(np.asarray(res[True].suffix_array)
+                                      .shape[0])))
+
+        # journaled (crash-resumable) build vs plain: fsync'd record per
+        # spilled run + crc32 per spill
+        jd = os.path.join(d, "journaled")
+        sb_j = SuperblockConfig(num_superblocks=superblocks,
+                                store_backend="chunked",
+                                cache_budget_bytes=budget,
+                                spill_dir=jd, resume=True)
+        t0 = time.perf_counter()
+        res_j = build_suffix_array_superblock(corpus, cfg=cfg, sb=sb_j)
+        t_j = time.perf_counter() - t0
+        if not np.array_equal(np.asarray(res_j.suffix_array),
+                              np.asarray(res[True].suffix_array)):
+            raise AssertionError(
+                "integrity regression: journaled build's SA differs from "
+                "the plain build")
+        rows.append(dict(case="journaled_build", verified_s=t_j,
+                         unverified_s=t_off,
+                         overhead_pct=100.0 * (t_j - t_off)
+                         / max(t_off, 1e-9),
+                         gated=False,
+                         suffixes=int(np.asarray(res_j.suffix_array)
+                                      .shape[0])))
+    if csv:
+        print("# checksummed vs unverified chunked build — identical SA, "
+              f"<= {max_overhead_pct}% wall overhead (gated); open_index "
+              "eager digests + journaled build ride along ungated")
+        cols = list(rows[0].keys())
+        print(",".join(cols))
+        for r in rows:
+            print(",".join(
+                f"{r[c]:.4f}" if isinstance(r[c], float) else str(r[c])
+                for c in cols))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -53,6 +53,7 @@ def main() -> None:
         build,
         efficiency,
         footprint,
+        integrity,
         partition,
         scaling,
         serving,
@@ -78,6 +79,9 @@ def main() -> None:
         # pipelined vs synchronous out-of-core build over a throttled store
         # (bit-identity + >= 1.2x overlap gate)
         "build": build.run,
+        # checksummed vs unverified build (bit-identity + <= 5% wall gate)
+        # + eager-open / journaled-build overhead rows
+        "integrity": integrity.run,
     }
     ap = argparse.ArgumentParser()
     ap.add_argument("sections", nargs="*", metavar="SECTION",

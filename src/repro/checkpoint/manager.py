@@ -28,6 +28,7 @@ import jax
 import msgpack
 import numpy as np
 
+from repro.core.integrity import publish_dir
 from repro.core.pipeline_exec import PipelineExecutor, PipelineTask
 
 try:  # bf16 & friends round-trip as raw bytes + a recorded dtype name
@@ -89,7 +90,8 @@ class CheckpointManager:
             f.write(msgpack.packb(meta))
         if os.path.exists(final):
             shutil.rmtree(final)
-        os.rename(tmp, final)
+        publish_dir(tmp, final)  # rename + parent-dir fsync: the publish
+        # itself is durable, not just the payload files
         self._prune()
         return final
 

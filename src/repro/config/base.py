@@ -404,6 +404,20 @@ class SuperblockConfig:
       to fit inside ``cache_budget_bytes`` (prefetched bytes are counted
       against the budget via ``add_frontier``); when it does not fit,
       staging silently falls back to synchronous.
+    ``resume``: arm the crash-safe build journal (requires ``spill_dir``):
+      completed block runs are recorded (with content checksums) in an
+      fsync'd append-only ``{spill_dir}/build.journal``, and re-entering
+      the build with the same corpus/config replays it, skipping every
+      verified-complete block — a killed build resumed this way produces a
+      bit-identical suffix array without redoing finished work
+      (``docs/fault_tolerance.md``).  On success the journal is retired.
+    ``store_retries``: > 0 wraps the store backend in
+      ``repro.core.store.RetryingBackend`` — transient fetch faults
+      (``TransientError``) are retried up to this many times with capped
+      exponential backoff before propagating; ``CorruptionError`` is never
+      retried.  0 (default) = no wrapping.
+    ``store_backoff_s``: base backoff delay for ``store_retries``
+      (doubles per attempt, capped at 1 s).
     """
 
     max_records_per_run: int = 0
@@ -421,6 +435,9 @@ class SuperblockConfig:
     write_manifest: bool = False
     sanitize: bool = False
     pipeline_depth: int = 1
+    resume: bool = False
+    store_retries: int = 0
+    store_backoff_s: float = 0.01
 
 
 # ---------------------------------------------------------------------------

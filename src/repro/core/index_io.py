@@ -32,6 +32,13 @@ from typing import Any, Dict, Optional, Tuple
 import numpy as np
 
 from repro.config import SAConfig, asdict
+from repro.core.integrity import (
+    CorruptionError,
+    crc32_bytes,
+    crc32_file,
+    fsync_file,
+    publish_file,
+)
 from repro.core.sanitize import SanitizingBackend, sanitize_enabled
 from repro.core.store import (
     ChunkedFileBackend,
@@ -45,7 +52,7 @@ SA_FILE = "suffix_array.npy"
 LCP_FILE = "lcp.npy"
 CORPUS_FILE = "corpus.sachunk"
 FORMAT = "repro-sa-index"
-VERSION = 1
+VERSION = 2  # v2 adds the per-artifact checksum digests + manifest self-crc
 
 # Items per read_items batch when serializing a backend's corpus to disk —
 # bounds the host copy during save regardless of corpus size.
@@ -57,32 +64,33 @@ def _same_file(a: Optional[str], b: str) -> bool:
 
 
 def _write_array(arr: np.ndarray, path: str) -> None:
-    """np.save via tmp+rename unless ``arr`` is already memmapped at
-    ``path`` (the streaming build's sink wrote it in place)."""
+    """np.save via the durable atomic-publish helper, unless ``arr`` is
+    already memmapped at ``path`` (the streaming build's sink wrote it in
+    place) — then it is flushed and fsync'd where it lies."""
     if isinstance(arr, np.memmap) and _same_file(getattr(arr, "filename", None), path):
-        arr.flush()
+        arr.flush()  # msync: pages reach the file
+        fsync_file(path)  # and the file reaches the platter
         return
     tmp = path + ".tmp.npy"  # np.save appends .npy to suffix-less paths
     np.save(tmp, np.asarray(arr))
-    os.replace(tmp, path)
+    publish_file(tmp, path)
 
 
 def _serialize_corpus(backend: StoreBackend, path: str, chunk_items: int = 0) -> None:
     """Stream the backend's items into a chunked corpus file, atomically.
 
-    The stream is written to a sibling temp file and renamed into place only
-    after ``write_chunked_stream`` has back-patched the item count and
-    closed it — a crash mid-serialization can never leave a plausible but
-    truncated ``corpus.sachunk`` for a later ``open_index`` to trust.
+    ``write_chunked_stream`` owns the whole safe-publish sequence (sibling
+    tmp, back-patched header, fsync'd rename via
+    :func:`repro.core.integrity.publish_file`) — a crash mid-serialization
+    can never leave a plausible but truncated ``corpus.sachunk`` for a
+    later ``open_index`` to trust.
     """
     from repro.data.chunk_store import write_chunked_stream
 
-    tmp = f"{path}.{os.getpid()}.tmp"
     write_chunked_stream(
-        stream_backend_items(backend, _SERIALIZE_BATCH), tmp,
+        stream_backend_items(backend, _SERIALIZE_BATCH), path,
         chunk_items=chunk_items,
     )
-    os.replace(tmp, path)
 
 
 def save_index(
@@ -117,6 +125,17 @@ def save_index(
         ref = os.path.abspath(corpus_ref)
         inside = os.path.dirname(ref) == os.path.abspath(index_dir)
         corpus_entry = os.path.basename(ref) if inside else ref
+        corpus_path = ref
+
+    # end-to-end digests: whole-file crc32 of every artifact the manifest
+    # points at, verified by open_index(verify="eager") before any query
+    # trusts the bytes.
+    checksums = {
+        SA_FILE: crc32_file(os.path.join(index_dir, SA_FILE)),
+        "corpus": crc32_file(corpus_path),
+    }
+    if lcp is not None:
+        checksums[LCP_FILE] = crc32_file(os.path.join(index_dir, LCP_FILE))
 
     manifest = {
         "format": FORMAT,
@@ -124,6 +143,7 @@ def save_index(
         "suffix_array": SA_FILE,
         "lcp": LCP_FILE if lcp is not None else None,
         "corpus": {"kind": "chunked", "path": corpus_entry},
+        "checksums": checksums,
         "geometry": {
             "text_mode": bool(backend.text_mode),
             "items": int(backend.n),
@@ -134,11 +154,16 @@ def save_index(
         "sa_config": asdict(cfg),
         "stats": _json_safe(stats or {}),
     }
+    # self-crc over the canonical manifest body: any later bit-flip in the
+    # manifest file is detectable, not just flips that break json parsing
+    manifest["manifest_crc"] = crc32_bytes(
+        json.dumps(manifest, sort_keys=True,
+                   separators=(",", ":")).encode("utf-8"))
     mpath = os.path.join(index_dir, MANIFEST_NAME)
     tmp = mpath + ".tmp"
     with open(tmp, "w") as f:
         json.dump(manifest, f, indent=2, sort_keys=True)
-    os.replace(tmp, mpath)
+    publish_file(tmp, mpath)
     return mpath
 
 
@@ -162,22 +187,50 @@ def _json_safe(obj: Any) -> Any:
 
 def read_manifest(index_dir: str) -> Dict[str, Any]:
     mpath = os.path.join(index_dir, MANIFEST_NAME)
-    with open(mpath) as f:
-        manifest = json.load(f)
-    if manifest.get("format") != FORMAT:
-        raise ValueError(f"{mpath}: not a {FORMAT} manifest")
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except ValueError as e:
+        raise CorruptionError("index manifest", detail=str(e),
+                              path=mpath) from e
+    if not isinstance(manifest, dict) or manifest.get("format") != FORMAT:
+        raise CorruptionError(
+            "index manifest", detail=f"not a {FORMAT} manifest", path=mpath)
     if manifest.get("version", 0) > VERSION:
         raise ValueError(
             f"{mpath}: version {manifest['version']} is newer than "
             f"this reader ({VERSION})"
         )
+    expected = manifest.pop("manifest_crc", None)
+    if expected is not None:
+        got = crc32_bytes(json.dumps(manifest, sort_keys=True,
+                                     separators=(",", ":")).encode("utf-8"))
+        if got != expected:
+            raise CorruptionError(
+                "index manifest",
+                detail=f"self-crc 0x{got:08x} != recorded 0x{expected:08x}",
+                path=mpath)
     return manifest
+
+
+def _verify_artifact(path: str, expected: int, artifact: str) -> None:
+    try:
+        got = crc32_file(path)
+    except OSError as e:
+        raise CorruptionError(artifact, detail=f"unreadable: {e}",
+                              path=path) from e
+    if got != expected:
+        raise CorruptionError(
+            artifact,
+            detail=f"crc 0x{got:08x} != manifest 0x{expected:08x}",
+            path=path)
 
 
 def open_index(
     index_dir: str,
     store_backend: str = "chunked",
     cache_budget_bytes: int = 0,
+    verify: str = "lazy",
 ) -> Tuple[StoreBackend, np.ndarray, Optional[np.ndarray], Dict[str, Any]]:
     """Read-only open: ``(backend, sa, lcp, manifest)``, no rebuild.
 
@@ -185,16 +238,42 @@ def open_index(
     ``"chunked"`` (default) keeps the corpus on disk behind the budgeted LRU
     chunk cache; ``"memory"`` materializes it host-resident for latency.
     The SA (and LCP, when present) are memmapped read-only.
+
+    ``verify`` picks the integrity posture (manifest self-crc is always
+    checked):
+
+    * ``"eager"`` — every artifact's whole-file crc32 is verified against
+      the manifest digests before the open returns: nothing a query later
+      touches is unchecked.  One sequential pass over each file.
+    * ``"lazy"`` (default) — corpus chunks are verified per-read as the LRU
+      loads them (v2 chunk footer); whole-file digests are not pre-checked.
+    * ``"off"`` — no checksum verification at all.
+
+    Verification failures raise
+    :class:`~repro.core.integrity.CorruptionError` naming the artifact.
     """
+    if verify not in ("eager", "lazy", "off"):
+        raise ValueError(f"unknown verify mode {verify!r}")
     manifest = read_manifest(index_dir)
     cfg = SAConfig(**manifest["sa_config"])
 
     corpus_path = manifest["corpus"]["path"]
     if not os.path.isabs(corpus_path):
         corpus_path = os.path.join(index_dir, corpus_path)
+    checksums = manifest.get("checksums") or {}
+    if verify == "eager" and checksums:
+        _verify_artifact(os.path.join(index_dir, SA_FILE),
+                         checksums[SA_FILE], SA_FILE)
+        if manifest.get("lcp") and LCP_FILE in checksums:
+            _verify_artifact(os.path.join(index_dir, LCP_FILE),
+                             checksums[LCP_FILE], LCP_FILE)
+        if "corpus" in checksums:
+            _verify_artifact(corpus_path, checksums["corpus"],
+                             manifest["corpus"]["path"])
     if store_backend == "chunked":
         backend: StoreBackend = ChunkedFileBackend(
-            corpus_path, cfg, cache_budget_bytes=cache_budget_bytes
+            corpus_path, cfg, cache_budget_bytes=cache_budget_bytes,
+            verify=verify != "off",
         )
     elif store_backend == "memory":
         from repro.data import chunk_store

@@ -1,0 +1,192 @@
+"""Append-only build journal: crash-safe progress records for the
+out-of-core superblock build.
+
+One JSON record per line, each carrying a ``crc`` of its own canonical
+serialization, fsync'd at unit-of-recovery boundaries.  The journal lives
+under ``SuperblockConfig.spill_dir`` next to the stable scratch directory;
+``resume=True`` replays it on re-entry and skips every verified-complete
+unit (see ``docs/fault_tolerance.md`` for the record format and resume
+semantics).
+
+Record types (``"t"``):
+
+* ``begin`` — build fingerprint (corpus geometry + content signature + the
+  plan shape).  A resume against a different corpus/plan is refused.
+* ``stage`` — block ``i``'s corpus window was staged (observability only:
+  staging is recomputed on resume).
+* ``block`` — block ``i``'s sorted run is durably spilled: run filename,
+  content crc, row count, and the block's build stats/footprint
+  contributions, so a resumed build reconstructs phase-2 state without
+  re-running the block.  Always fsync'd — this is the unit of recovery.
+* ``emit`` — merge emission watermark (rows emitted so far).  Batched
+  fsync: the merge is redone wholesale on resume, the watermark exists for
+  observability and torn-tail tolerance testing.
+
+Failure semantics on replay: a torn **final** record (the crash landed
+mid-append) is dropped and its unit simply replays; a corrupt **interior**
+record is a :class:`~repro.core.integrity.CorruptionError` — the journal
+itself is an artifact, and silently skipping verified history could resume
+against the wrong plan.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.integrity import (
+    CorruptionError,
+    crc32_array,
+    crc32_bytes,
+    fsync_dir,
+)
+
+__all__ = ["BuildJournal", "verify_spilled_run"]
+
+JOURNAL_NAME = "build.journal"
+
+# non-durable records (stage/emit) still hit the disk at this cadence so a
+# crash loses at most a bounded window of observability records
+_SYNC_EVERY = 64
+
+
+def _coerce(x):
+    """json default hook: numpy scalars -> python scalars; anything else
+    degrades to ``str`` (stats payloads are observability, and ``str`` is
+    deterministic, so the replayed canonical form still matches the crc)."""
+    if isinstance(x, np.integer):
+        return int(x)
+    if isinstance(x, np.floating):
+        return float(x)
+    if isinstance(x, np.bool_):
+        return bool(x)
+    if isinstance(x, np.ndarray):
+        return x.tolist()
+    return str(x)
+
+
+def _canon(rec: Dict[str, Any]) -> str:
+    """Canonical serialization the crc is computed over.  Write and replay
+    must agree, so the form is fully deterministic: sorted keys, no
+    whitespace, numpy coerced to the same natives json parses back."""
+    return json.dumps(rec, sort_keys=True, separators=(",", ":"),
+                      default=_coerce)
+
+
+class BuildJournal:
+    """Writer/replayer for the build journal.  Main-thread only: records
+    are appended at unit *completion* (after the async spill write is observed
+    durable via ``PipelineTask.done()``), so no locking is needed and the
+    threading discipline (salint SAL008/SAL009) holds.
+    """
+
+    VERSION = 1
+
+    def __init__(self, path: str):
+        self.path = path
+        self._f = None
+        self._unsynced = 0
+        self.appended = 0
+
+    # -- writing ----------------------------------------------------------
+
+    def open(self) -> "BuildJournal":
+        self._f = open(self.path, "a", encoding="utf-8")
+        return self
+
+    def append(self, rec: Dict[str, Any], durable: bool = True) -> None:
+        """Append one record (``crc`` stamped here).  ``durable=True``
+        fsyncs before returning — the record's unit is then recoverable."""
+        assert self._f is not None, "journal not open"
+        body = _canon(rec)
+        rec = dict(rec)
+        rec["crc"] = crc32_bytes(body.encode("utf-8"))
+        self._f.write(_canon(rec) + "\n")
+        self._f.flush()
+        self.appended += 1
+        if durable:
+            os.fsync(self._f.fileno())
+            self._unsynced = 0
+        else:
+            self._unsynced += 1
+            if self._unsynced >= _SYNC_EVERY:
+                os.fsync(self._f.fileno())
+                self._unsynced = 0
+
+    def close(self) -> None:
+        if self._f is not None:
+            self._f.flush()
+            os.fsync(self._f.fileno())
+            self._f.close()
+            self._f = None
+
+    def finalize(self) -> None:
+        """Successful build end: the journal has served its purpose —
+        remove it (durably) so a later build in the same dir starts clean."""
+        self.close()
+        if os.path.exists(self.path):
+            os.unlink(self.path)
+            fsync_dir(os.path.dirname(os.path.abspath(self.path)))
+
+    # -- replay -----------------------------------------------------------
+
+    @staticmethod
+    def load(path: str) -> List[Dict[str, Any]]:
+        """Replay the journal into validated records.
+
+        A torn final append (truncated line / missing newline) is dropped —
+        its unit replays.  Any other validation failure raises
+        :class:`CorruptionError` naming the record.
+        """
+        if not os.path.exists(path):
+            return []
+        with open(path, "rb") as f:
+            raw = f.read().decode("utf-8", errors="replace")
+        lines = raw.split("\n")
+        tail_torn = bool(lines) and lines[-1] != ""  # no trailing newline
+        if lines and lines[-1] == "":
+            lines.pop()
+        records: List[Dict[str, Any]] = []
+        for idx, line in enumerate(lines):
+            rec: Optional[Dict[str, Any]] = None
+            ok = False
+            try:
+                parsed = json.loads(line)
+                if isinstance(parsed, dict) and "crc" in parsed:
+                    crc = parsed.pop("crc")
+                    ok = crc == crc32_bytes(_canon(parsed).encode("utf-8"))
+                    rec = parsed
+            except ValueError:
+                ok = False
+            if not ok:
+                if idx == len(lines) - 1 and tail_torn:
+                    break  # torn final append: drop, unit replays
+                raise CorruptionError(
+                    f"build journal record {idx}", path=path)
+            records.append(rec)
+        return records
+
+
+def verify_spilled_run(path: str, expected_crc: int,
+                       artifact: str) -> np.ndarray:
+    """Load a journaled spilled run and verify its content crc.
+
+    Returns the read-only memmap on success.  Any load failure or crc
+    mismatch is a :class:`CorruptionError` naming the run — a journaled
+    run that exists but does not verify must never be silently rebuilt
+    (the journal said it was durable; the bytes disagree).
+    """
+    try:
+        mm = np.load(path, mmap_mode="r")
+    except (ValueError, OSError, EOFError) as e:
+        raise CorruptionError(artifact, detail=f"unreadable: {e}",
+                              path=path) from e
+    got = crc32_array(mm)
+    if got != expected_crc:
+        raise CorruptionError(
+            artifact,
+            detail=f"crc 0x{got:08x} != journaled 0x{expected_crc:08x}",
+            path=path)
+    return mm

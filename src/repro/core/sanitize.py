@@ -46,10 +46,14 @@ def sanitize_enabled(sb=None) -> bool:
 
 
 def unwrap_backend(backend: StoreBackend) -> StoreBackend:
-    """The real backend behind any sanitizing proxy layers (for
-    ``isinstance`` dispatch on the backend's residency regime)."""
-    while isinstance(backend, SanitizingBackend):
+    """The real backend behind any proxy layers — sanitizing, retrying,
+    throttling, fault-injecting — all of which follow the wrapper idiom of
+    holding the wrapped backend as ``.inner`` (for ``isinstance`` dispatch
+    on the backend's residency regime)."""
+    depth = 0
+    while "inner" in getattr(backend, "__dict__", ()) and depth < 32:
         backend = backend.inner
+        depth += 1
     return backend
 
 

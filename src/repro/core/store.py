@@ -29,6 +29,11 @@ from jax import lax
 from repro.config import SAConfig
 from repro.core import encoding
 from repro.core.distributed import bucket_scatter, exchange
+from repro.core.integrity import (
+    CorruptionError,
+    DEFAULT_RETRYABLE,
+    TransientStoreError,
+)
 from repro.core.types import WORD_BITS, KEY_SENTINEL
 
 
@@ -429,10 +434,14 @@ class ChunkedFileBackend(StoreBackend):
     transient and must not evict the merge's working set.
     """
 
-    def __init__(self, path: str, cfg: SAConfig, cache_budget_bytes: int = 0):
+    def __init__(self, path: str, cfg: SAConfig, cache_budget_bytes: int = 0,
+                 verify: bool = True):
         from repro.data.chunk_store import ChunkedCorpusReader
 
-        self._reader = ChunkedCorpusReader(path)
+        # every chunk the LRU caches is crc-checked on load (v2 files);
+        # the overhead is gated <5% by the benchmarks.run build integrity
+        # section, so verification defaults on.
+        self._reader = ChunkedCorpusReader(path, verify=verify)
         meta = self._reader.meta
         self._init_geometry(meta.text_mode, meta.items, meta.row_len, cfg)
         self.path = path
@@ -560,6 +569,132 @@ class ThrottledBackend(StoreBackend):
     def read_items(self, lo: int, hi: int) -> np.ndarray:
         self.read_calls += 1
         self._sleep(self.read_delay_s)
+        return self.inner.read_items(lo, hi)
+
+    def close(self) -> None:
+        self.inner.close()
+
+
+class RetryingBackend(StoreBackend):
+    """Transparent retry proxy around any :class:`StoreBackend`.
+
+    Backend reads/gathers that raise a *transient* error (the
+    ``retryable`` allowlist, by default the shared
+    :data:`~repro.core.integrity.DEFAULT_RETRYABLE` taxonomy) are retried
+    with deterministic capped exponential backoff — no jitter, so a retried
+    build is reproducible.  :class:`~repro.core.integrity.CorruptionError`
+    is **never** retried: corrupt bytes stay corrupt, and masking them
+    behind a retry loop would turn a detectable fault into a wrong answer.
+
+    Retry accounting lives in ``retry_attempts`` / ``retried_calls`` /
+    ``gave_up`` — deliberately *not* the gated :class:`FetchStats` counter
+    names (salint SAL010): the store's traffic counters are a property of
+    the access schedule, and a flaky medium must not change what the
+    traffic-equality benchmark gates measure.  ``sleep`` is injectable so
+    tests assert the backoff sequence without wall-clock cost.
+    """
+
+    def __init__(self, inner: StoreBackend, retries: int = 3,
+                 backoff_s: float = 0.01, max_backoff_s: float = 1.0,
+                 retryable=DEFAULT_RETRYABLE, sleep=time.sleep):
+        self.inner = inner
+        self.retries = int(retries)
+        self.backoff_s = float(backoff_s)
+        self.max_backoff_s = float(max_backoff_s)
+        self.retryable = tuple(retryable)
+        self._sleep = sleep
+        self.retry_attempts = 0  # total extra attempts across all calls
+        self.retried_calls = 0  # calls that needed at least one retry
+        self.gave_up = 0  # calls that exhausted the budget
+
+    def __getattr__(self, name: str):
+        return getattr(self.inner, name)
+
+    @property
+    def resident_bytes(self) -> int:
+        return self.inner.resident_bytes
+
+    def _call(self, fn, *args):
+        attempt = 0
+        while True:
+            try:
+                return fn(*args)
+            except CorruptionError:
+                raise  # fatal by contract: see repro.core.integrity
+            except self.retryable:
+                if attempt >= self.retries:
+                    self.gave_up += 1
+                    raise
+                if attempt == 0:
+                    self.retried_calls += 1
+                self.retry_attempts += 1
+                delay = min(self.backoff_s * (2 ** attempt),
+                            self.max_backoff_s)
+                if delay > 0:
+                    self._sleep(delay)
+                attempt += 1
+
+    def gather(self, gidx: np.ndarray, depth: np.ndarray) -> np.ndarray:
+        return self._call(self.inner.gather, gidx, depth)
+
+    def read_items(self, lo: int, hi: int) -> np.ndarray:
+        return self._call(self.inner.read_items, lo, hi)
+
+    def close(self) -> None:
+        self.inner.close()
+
+
+class FlakyBackend(StoreBackend):
+    """Deterministic fault injector: scripted transient failures on backend
+    reads/gathers (the chaos-harness counterpart of ``runtime.fault``'s
+    step-level :class:`FaultInjector`).
+
+    Failure ordinals count *successful* pass-throughs: an injected failure
+    does not advance the ordinal, so a retried call fails
+    ``failures_per_call`` times at the same position and then succeeds —
+    the sequence of calls reaching ``inner`` is identical to a fault-free
+    run, which is exactly the transparency the retry layer claims.
+    ``fail_every=N`` fails every Nth call; explicit ordinals come via
+    ``fail_gathers`` / ``fail_reads``.
+    """
+
+    def __init__(self, inner: StoreBackend, fail_gathers=(), fail_reads=(),
+                 fail_every: int = 0, failures_per_call: int = 1):
+        self.inner = inner
+        self.fail_gathers = {int(x) for x in fail_gathers}
+        self.fail_reads = {int(x) for x in fail_reads}
+        self.fail_every = int(fail_every)
+        self.failures_per_call = int(failures_per_call)
+        self.gather_calls = 0
+        self.read_calls = 0
+        self.injected = 0
+        self._fails: dict = {}
+
+    def __getattr__(self, name: str):
+        return getattr(self.inner, name)
+
+    @property
+    def resident_bytes(self) -> int:
+        return self.inner.resident_bytes
+
+    def _maybe_fail(self, kind: str, n: int, scripted) -> None:
+        hit = n in scripted or (self.fail_every > 0
+                                and n % self.fail_every == 0)
+        c = self._fails.get((kind, n), 0)
+        if hit and c < self.failures_per_call:
+            self._fails[(kind, n)] = c + 1
+            self.injected += 1
+            raise TransientStoreError(
+                f"injected {kind} fault at call {n} (#{c + 1})")
+
+    def gather(self, gidx: np.ndarray, depth: np.ndarray) -> np.ndarray:
+        self._maybe_fail("gather", self.gather_calls, self.fail_gathers)
+        self.gather_calls += 1
+        return self.inner.gather(gidx, depth)
+
+    def read_items(self, lo: int, hi: int) -> np.ndarray:
+        self._maybe_fail("read", self.read_calls, self.fail_reads)
+        self.read_calls += 1
         return self.inner.read_items(lo, hi)
 
     def close(self) -> None:
@@ -960,6 +1095,29 @@ def stream_backend_items(backend: StoreBackend,
     batch_items = max(1, int(batch_items))
     for lo in range(0, backend.n, batch_items):
         yield backend.read_items(lo, min(lo + batch_items, backend.n))
+
+
+def backend_fingerprint(backend: StoreBackend,
+                        sample_items: int = 1024) -> dict:
+    """Cheap geometry + content signature of a backend's corpus.
+
+    The build journal (``repro.core.journal``) stamps this into its
+    ``begin`` record so a ``--resume`` against a *different* corpus (or a
+    reshaped one) is refused instead of splicing stale runs into a fresh
+    build.  Content coverage is a head sample — a fingerprint, not an
+    integrity check (chunk crcs do that); lives in the store layer so the
+    raw ``read_items`` stays inside store accounting's home (SAL002).
+    """
+    head = np.ascontiguousarray(
+        backend.read_items(0, min(backend.n, int(sample_items))), np.int32)
+    from repro.core.integrity import crc32_array
+
+    return {
+        "items": int(backend.n),
+        "row_len": int(backend.row_len),
+        "text_mode": bool(backend.text_mode),
+        "head_crc": crc32_array(head),
+    }
 
 
 def materialize_backend(backend: StoreBackend) -> np.ndarray:

@@ -67,6 +67,8 @@ from typing import Callable, List, Optional, Tuple
 import numpy as np
 
 from repro.config import SAConfig, SuperblockConfig
+from repro.core.integrity import CorruptionError, crc32_array, publish_file
+from repro.core.journal import JOURNAL_NAME, BuildJournal, verify_spilled_run
 from repro.core.lcp import lcp_from_sa, pairwise_lcp
 from repro.core.pipeline import DeviceRefiner, build_suffix_array
 from repro.core.pipeline_exec import PipelineExecutor, pipeline_point
@@ -82,8 +84,10 @@ from repro.core.store import (
     ChunkedFileBackend,
     CorpusStore,
     InMemoryBackend,
+    RetryingBackend,
     StoreBackend,
     WindowCursor,
+    backend_fingerprint,
     materialize_backend,
 )
 from repro.core.types import WORD_BITS, WORD_MOD, Footprint, SAResult
@@ -204,13 +208,23 @@ class _Scratch:
     """
 
     def __init__(self, parent: Optional[str],
-                 executor: Optional[PipelineExecutor] = None):
-        self.dir = tempfile.mkdtemp(prefix="sa_superblock_", dir=parent)
+                 executor: Optional[PipelineExecutor] = None,
+                 stable_dir: Optional[str] = None):
+        # journaled (resumable) builds use a *stable* scratch path under
+        # spill_dir so a resumed attempt finds the previous attempt's runs;
+        # per-instance unique spill names keep attempts from colliding.
+        if stable_dir is not None:
+            os.makedirs(stable_dir, exist_ok=True)
+            self.dir = stable_dir
+        else:
+            self.dir = tempfile.mkdtemp(prefix="sa_superblock_", dir=parent)
         self._n = 0
+        self._tag = uuid.uuid4().hex[:8]
         self.spilled_runs = 0
         self.spilled_bytes = 0
         self.executor = executor
         self._pending: List = []
+        self.last_spill: Optional[Tuple[str, object]] = None
 
     def path(self, name: str) -> str:
         return os.path.join(self.dir, name)
@@ -223,8 +237,13 @@ class _Scratch:
     def spill_run(self, arr: np.ndarray) -> np.ndarray:
         """Spill a sorted run to disk and hand back a read-only memmap: the
         run's body is disk-backed, only pages the merge actually touches
-        (frontier read-ahead, partition probes) come resident."""
-        p = self.path(f"run{self._n}.npy")
+        (frontier read-ahead, partition probes) come resident.
+
+        ``last_spill`` records ``(path, task-or-None)`` of this spill so the
+        build journal can append the run's completion record once the write
+        is observed durable (``task.done()``) — on the main thread, after
+        the fact, which keeps journaling out of the worker context."""
+        p = self.path(f"run_{self._tag}_{self._n}.npy")
         self._n += 1
         arr = np.ascontiguousarray(arr)
         self.spilled_runs += 1
@@ -232,9 +251,12 @@ class _Scratch:
         if self.executor is not None:
             out = np.lib.format.open_memmap(
                 p, mode="w+", dtype=arr.dtype, shape=arr.shape)
-            self._pending.append(self.executor.submit(self._fill, out, arr))
+            task = self.executor.submit(self._fill, out, arr)
+            self._pending.append(task)
+            self.last_spill = (p, task)
             return out
         np.save(p, arr)
+        self.last_spill = (p, None)
         return np.load(p, mmap_mode="r")
 
     def drain_spills(self) -> None:
@@ -806,12 +828,12 @@ class _OutputSink:
         if self.lcp_path is not None:
             self._lcp.flush()
             del self._lcp
-            os.replace(self._lcp_tmp, self.lcp_path)
+            publish_file(self._lcp_tmp, self.lcp_path)
             self._lcp = np.load(self.lcp_path, mmap_mode="r+")
         if self.path is not None:
             self._out.flush()
             del self._out  # drop the write mapping before the rename
-            os.replace(self._tmp, self.path)
+            publish_file(self._tmp, self.path)
             self._out = np.load(self.path, mmap_mode="r+")
         return self._out
 
@@ -845,6 +867,28 @@ class _OutputSink:
         """The emitted LCP array (None unless built with ``pair_lcp``);
         valid after :meth:`result`."""
         return self._lcp
+
+
+class _JournalingSink:
+    """Thin tee around the output sink: every emitted piece appends a merge
+    watermark record to the build journal (non-durable, batched fsync — the
+    merge phase is redone wholesale on resume, so the watermark is
+    observability and torn-tail test surface, not a unit of recovery).
+    Everything else delegates to the wrapped sink."""
+
+    def __init__(self, inner, journal: BuildJournal):
+        self.inner = inner
+        self.journal = journal
+        self._emitted = 0
+
+    def append(self, piece: np.ndarray) -> None:
+        self.inner.append(piece)
+        self._emitted += int(np.asarray(piece).shape[0])
+        self.journal.append({"t": "emit", "rows": self._emitted},
+                            durable=False)
+
+    def __getattr__(self, name: str):
+        return getattr(self.inner, name)
 
 
 class _RunTile:
@@ -1257,34 +1301,58 @@ def build_suffix_array_superblock(
     under ``sb.cache_budget_bytes``.
     """
     # a scratch dir is needed whenever the build streams (serialized corpus
-    # and/or per-block SA spills): explicit chunked request, a corpus file
-    # path, or a non-resident backend instance.
+    # and/or per-block SA spills) — and always under the journaled resumable
+    # regime, where block runs spill on *every* backend so a resumed build
+    # has something durable to pick up.
+    journaled = sb.resume and sb.spill_dir is not None
     needs_scratch = (
         isinstance(corpus, (str, os.PathLike))
         or (isinstance(corpus, StoreBackend)
             and not isinstance(corpus, InMemoryBackend))
         or (not isinstance(corpus, StoreBackend)
             and sb.store_backend == "chunked")
+        or journaled
     )
     if sb.spill_dir is not None:
         os.makedirs(sb.spill_dir, exist_ok=True)
-    scratch = _Scratch(sb.spill_dir) if needs_scratch else None
+    if journaled:
+        # a killed attempt cannot clean up after itself: sweep its orphaned
+        # publish tmps (the journal + scratch runs are NOT tmps and survive)
+        for orphan in os.listdir(sb.spill_dir):
+            if orphan.endswith((".tmp", ".tmp.npy")):
+                with contextlib.suppress(OSError):
+                    os.unlink(os.path.join(sb.spill_dir, orphan))
+        scratch = _Scratch(sb.spill_dir,
+                           stable_dir=os.path.join(sb.spill_dir, "scratch"))
+    else:
+        scratch = _Scratch(sb.spill_dir) if needs_scratch else None
     backend: Optional[StoreBackend] = None
     owns_backend = True
+    ok = False
     try:
         backend = _resolve_backend(corpus, cfg, sb, scratch)
         owns_backend = backend is not corpus  # decided before any wrapping
+        if sb.store_retries > 0:
+            backend = RetryingBackend(backend, retries=sb.store_retries,
+                                      backoff_s=sb.store_backoff_s)
         if sanitize_enabled(sb):
             backend = SanitizingBackend(backend)
-        return _build_superblock(
+        res = _build_superblock(
             backend, lengths, cfg, sb, mesh, scratch,
             original_corpus=corpus,
         )
+        ok = True
+        return res
     finally:
         if backend is not None and owns_backend:
             backend.close()
         if scratch is not None:
-            scratch.cleanup()
+            if getattr(scratch, "_journal", None) is not None:
+                scratch._journal.close()  # flushed; kept on disk for resume
+            if ok or not journaled:
+                # a failed journaled build keeps scratch + journal: that IS
+                # the resumable state the next --resume attempt picks up
+                scratch.cleanup()
 
 
 def _build_superblock(
@@ -1378,6 +1446,49 @@ def _build_superblock_phases(
         )
     assert not streaming or scratch is not None  # wrapper provides it
 
+    # ---- build journal: resumable unit-of-recovery bookkeeping ---------
+    # sb.resume + spill_dir arm an fsync'd append-only journal next to the
+    # stable scratch dir.  Completed block runs (with content crcs) are
+    # journaled as they become durable; re-entering the build replays the
+    # journal and skips every verified-complete block.  The merge phase is
+    # always redone from the preserved runs — runs are the unit of
+    # recovery, emission is cheap relative to block builds.
+    jr: Optional[BuildJournal] = None
+    resumed: dict = {}
+    journal_hits = 0
+    if sb.resume and sb.spill_dir is not None and scratch is not None:
+        jpath = os.path.join(sb.spill_dir, JOURNAL_NAME)
+        fp_rec = dict(backend_fingerprint(backend))
+        fp_rec.update(superblocks=int(plan.num_superblocks),
+                      capacity=int(plan.capacity_records),
+                      merge_algorithm=sb.merge_algorithm,
+                      emit_lcp=bool(sb.emit_lcp))
+        records = BuildJournal.load(jpath)  # CorruptionError on bad interior
+        if records:
+            first = records[0]
+            if first.get("t") != "begin":
+                raise CorruptionError(
+                    "build journal", detail="first record is not 'begin'",
+                    path=jpath)
+            if first.get("fp") != fp_rec:
+                raise ValueError(
+                    "resume refused: the journal in spill_dir belongs to a "
+                    "different build (corpus/plan fingerprint mismatch) — "
+                    "remove it or use a fresh spill_dir")
+            for r in records:
+                if r.get("t") != "block":
+                    continue
+                run_path = scratch.path(r["run"])
+                if not os.path.exists(run_path):
+                    continue  # spill never became durable: rebuild it
+                mm = verify_spilled_run(run_path, r["run_crc"],
+                                        f"spilled run {r['run']}")
+                resumed[int(r["i"])] = (mm, r)
+        jr = BuildJournal(jpath).open()
+        scratch._journal = jr  # the lifecycle wrapper closes it on exit
+        if not records:
+            jr.append({"t": "begin", "v": BuildJournal.VERSION, "fp": fp_rec})
+
     store = CorpusStore(
         None, cfg, backend=backend,
         request_capacity=min(sb.request_capacity, plan.capacity_records),
@@ -1401,7 +1512,7 @@ def _build_superblock_phases(
         Runs that are already spill memmaps (or views of one — e.g. the
         final text block, which the risk split passes through unfiltered)
         stay as they are: re-spilling would read the whole run back in."""
-        if (scratch is not None and streaming and sa_b.size
+        if (scratch is not None and (streaming or jr is not None) and sa_b.size
                 and not isinstance(sa_b, np.memmap)):
             return scratch.spill_run(sa_b)
         return sa_b
@@ -1436,7 +1547,7 @@ def _build_superblock_phases(
         if pipe is None:
             return
         for j in range(next_i, min(len(blocks), next_i + pipe.depth)):
-            if j in prefetched:
+            if j in prefetched or j in resumed:
                 continue
             blo, bhi = blocks[j]
             reg = 0
@@ -1451,8 +1562,41 @@ def _build_superblock_phases(
             # below (note_staged at the hand-off — salint SAL010)
             prefetched[j] = (pipe.submit(store.stage_read, blo, bhi), reg)
 
+    # journal records wait here until their run's async spill write is
+    # observed complete on the main thread (SAL008: the journal itself is
+    # touched only from here) — a journaled run must be durable before the
+    # record promising it exists.
+    pending_journal: List[tuple] = []
+
+    def _flush_journal(force: bool = False) -> None:
+        while pending_journal:
+            rec, task = pending_journal[0]
+            if task is not None:
+                if not force and not task.done():
+                    return
+                task.result()  # re-raises a failed spill write
+            jr.append(rec)  # fsync'd: the unit of recovery
+            pending_journal.pop(0)
+
     t_stage = t_build = 0.0
     for i, (lo, hi) in enumerate(blocks):
+        pre = resumed.get(i)
+        if pre is not None:
+            # verified-complete on a prior attempt: adopt the journaled run,
+            # stats, and footprint contributions without touching the store.
+            mm, rec = pre
+            local_sas.append(mm)
+            block_stats.append(rec["stats"])
+            bfc = rec.get("fpc", {})
+            fp.shuffle += bfc.get("shuffle", 0)
+            fp.fetch_request += bfc.get("fetch_request", 0)
+            fp.fetch_response += bfc.get("fetch_response", 0)
+            fp.rounds = max(fp.rounds, bfc.get("rounds", 0))
+            fp.dropped += bfc.get("dropped", 0)
+            fp.peak_records = max(fp.peak_records,
+                                  rec["stats"]["num_suffixes"])
+            journal_hits += 1
+            continue
         t0 = time.perf_counter()
         entry = prefetched.pop(i, None)
         if entry is not None:
@@ -1476,7 +1620,8 @@ def _build_superblock_phases(
             lens_b = None if lengths is None else np.asarray(lengths)[lo:hi]
             res = build_suffix_array(block, lengths=lens_b, cfg=cfg, mesh=mesh)
             sa_b = res.suffix_array + (np.int64(lo) << plan.stride_bits)
-        local_sas.append(keep_run(sa_b))
+        run = keep_run(sa_b)
+        local_sas.append(run)
         bf = res.footprint
         fp.shuffle += bf.shuffle
         fp.fetch_request += bf.fetch_request
@@ -1485,9 +1630,29 @@ def _build_superblock_phases(
         fp.dropped += bf.dropped
         fp.peak_records = max(fp.peak_records, res.stats["num_suffixes"])
         block_stats.append(res.stats)
+        if jr is not None and isinstance(run, np.memmap):
+            path, task = scratch.last_spill
+            rec = {
+                "t": "block", "i": i,
+                "run": os.path.basename(path),
+                "run_crc": crc32_array(sa_b),
+                "rows": int(sa_b.size),
+                "stats": res.stats,
+                "fpc": {
+                    "shuffle": int(bf.shuffle),
+                    "fetch_request": int(bf.fetch_request),
+                    "fetch_response": int(bf.fetch_response),
+                    "rounds": int(bf.rounds),
+                    "dropped": int(bf.dropped),
+                },
+            }
+            pending_journal.append((rec, task))
+            _flush_journal()
         t_build += time.perf_counter() - t0
     if scratch is not None:
         scratch.drain_spills()  # spilled runs must be on disk before reads
+    if jr is not None:
+        _flush_journal(force=True)  # every run is durable now
 
     # ---- phase 3: boundary-exact merge via the store -------------------
     t_merge0 = time.perf_counter()
@@ -1514,6 +1679,8 @@ def _build_superblock_phases(
     sink = _OutputSink(total_suffixes, memmap_path=out_path,
                        lcp_path=lcp_path, pair_lcp=pair_lcp, executor=pipe)
     sinks.append(sink)
+    if jr is not None:
+        sink = _JournalingSink(sink, jr)  # emitted-rows watermark records
     if sanitize_enabled(sb):
         # order-verify emitted pieces through a private audit store: the
         # build store's traffic counters (gated by benchmarks) stay clean.
@@ -1671,6 +1838,11 @@ def _build_superblock_phases(
         "spilled_bytes": scratch.spilled_bytes if scratch else 0,
         "emit_lcp": bool(sb.emit_lcp),
         "sanitized": sanitize_enabled(sb),
+        # crash-safety layer (PR 10): journal replay + retrying store
+        "journaled": jr is not None,
+        "journal_hits": int(journal_hits),
+        "store_retry_attempts": int(getattr(backend, "retry_attempts", 0)),
+        "store_retried_calls": int(getattr(backend, "retried_calls", 0)),
         "pipeline_depth": int(sb.pipeline_depth),
         # phase wall-times: what each overlap in the pipelined schedule can
         # hide behind (staging behind t_build_s, refill gathers inside
@@ -1682,6 +1854,11 @@ def _build_superblock_phases(
     res = SAResult(suffix_array=sa, footprint=fp, stats=stats, lcp=sink.lcp)
     if sb.write_manifest:
         _write_index_manifest(res, backend, cfg, sb, scratch)
+    if jr is not None:
+        # terminal record, then retire the journal: the build is complete
+        # and the index artifacts are published — nothing left to resume.
+        jr.append({"t": "done", "rows": int(sa.shape[0])})
+        jr.finalize()
     return res
 
 

@@ -84,6 +84,15 @@ def main():
                     help="finalize the build as a reopenable index directory "
                          "(SA + LCP + corpus + manifest; scheme mode only) — "
                          "serve it with repro.launch.serve --index-dir")
+    ap.add_argument("--resume", action="store_true",
+                    help="crash-safe journaled build (requires --index-dir): "
+                         "completed block runs are journaled with checksums "
+                         "and a re-run of the same command resumes, skipping "
+                         "verified-complete work")
+    ap.add_argument("--store-retries", type=int, default=0,
+                    help="retry transient store-fetch faults this many times "
+                         "(capped exponential backoff) before failing the "
+                         "build; 0 = fail fast")
     args = ap.parse_args()
 
     import numpy as np
@@ -114,6 +123,8 @@ def main():
 
     if args.index_dir and args.mode != "scheme":
         ap.error("--index-dir requires --mode scheme")
+    if args.resume and not args.index_dir:
+        ap.error("--resume requires --index-dir (the journal lives there)")
     sb = SuperblockConfig(
         num_superblocks=args.superblocks,
         max_records_per_run=args.max_records_per_run,
@@ -127,6 +138,8 @@ def main():
         emit_lcp=bool(args.index_dir),
         write_manifest=bool(args.index_dir),
         pipeline_depth=args.pipeline_depth,
+        resume=args.resume,
+        store_retries=args.store_retries,
     )
 
     source = corpus
@@ -192,6 +205,9 @@ def main():
               f"{res.stats['store_cache_hit_rate']:.2f}, "
               f"{res.stats['spilled_runs']} spilled runs "
               f"({res.stats['spilled_bytes']}B)")
+    if res.stats.get("journaled"):
+        print(f"resume: {res.stats['journal_hits']} of "
+              f"{res.stats['superblocks']} blocks recovered from the journal")
     if args.index_dir:
         print(f"index: {res.stats['index_dir']} (serve with "
               f"python -m repro.launch.serve --index-dir {args.index_dir})")

@@ -50,6 +50,12 @@ def main():
     ap.add_argument("--hot-fraction", type=float, default=0.25,
                     help="fraction of synthetic queries drawn from a small "
                          "hot set (exercises the result cache)")
+    ap.add_argument("--verify", choices=["eager", "lazy", "off"],
+                    default="lazy",
+                    help="artifact integrity posture at open: pre-check "
+                         "every whole-file checksum (eager), verify corpus "
+                         "chunks as reads load them (lazy, default), or "
+                         "trust the bytes (off)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -64,6 +70,7 @@ def main():
         cache_budget_bytes=args.cache_budget,
         num_shards=args.shards,
         result_cache_bytes=args.result_cache,
+        verify=args.verify,
     )
     print(f"opened {args.index_dir}: {idx.stats()['suffixes']} suffixes, "
           f"backend={args.store_backend}, lcp={idx.lcp is not None} "

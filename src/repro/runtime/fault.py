@@ -7,17 +7,27 @@ deterministic loader this gives exactly-once step semantics.
 
 ``FaultInjector`` simulates those failures for tests (probability-driven or
 scripted step lists).
+
+The error taxonomy is shared with the store layer
+(:mod:`repro.core.integrity`): :class:`TransientFault` subclasses
+``TransientError`` ("may succeed on retry"), while ``CorruptionError``
+("bytes on disk are wrong") is **never** retried — ``retry_step`` re-raises
+it immediately regardless of the ``retryable`` allowlist, because retrying a
+corrupt read can only reproduce the corruption or mask it with a different
+wrong answer.  See ``docs/fault_tolerance.md``.
 """
 from __future__ import annotations
 
 import logging
 import time
-from typing import Callable, Iterable, Optional, Set
+from typing import Callable, Iterable, Optional, Set, Tuple, Type
+
+from repro.core.integrity import CorruptionError, TransientError
 
 log = logging.getLogger("repro.fault")
 
 
-class TransientFault(RuntimeError):
+class TransientFault(TransientError):
     pass
 
 
@@ -44,13 +54,21 @@ def retry_step(
     retries: int = 3,
     backoff: float = 0.05,
     on_retry: Optional[Callable[[int, Exception], None]] = None,
+    retryable: Tuple[Type[BaseException], ...] = (Exception,),
 ):
-    """Run ``fn`` with transactional retry; re-raises after ``retries``."""
+    """Run ``fn`` with transactional retry; re-raises after ``retries``.
+
+    ``retryable`` narrows which exceptions are retried (default keeps the
+    historical catch-all boundary).  :class:`CorruptionError` is always
+    fatal: it propagates immediately even when the allowlist would match.
+    """
     err: Optional[Exception] = None
     for attempt in range(retries + 1):
         try:
             return fn(*args)
-        except Exception as e:  # noqa: BLE001 — deliberate catch-all boundary
+        except CorruptionError:
+            raise  # corrupt bytes stay corrupt — retrying masks the fault
+        except retryable as e:  # noqa: BLE001 — deliberate retry boundary
             err = e
             if attempt == retries:
                 break

@@ -510,18 +510,23 @@ class SuffixArrayIndex:
         store_backend: str = "chunked",
         cache_budget_bytes: int = 0,
         request_capacity: int = 4096,
+        verify: str = "lazy",
         **engine_kw,
     ) -> "SuffixArrayIndex":
         """Serve a previously built index directory — no rebuild.
 
         ``store_backend="chunked"`` (default) keeps the corpus on disk
         behind the budgeted LRU chunk cache; ``"memory"`` materializes it.
+        ``verify`` sets the integrity posture (``"eager"`` / ``"lazy"`` /
+        ``"off"`` — see :func:`repro.core.index_io.open_index`); failures
+        raise :class:`repro.core.integrity.CorruptionError` naming the
+        artifact.
         """
         from repro.core import index_io
 
         backend, sa, lcp, manifest = index_io.open_index(
             index_dir, store_backend=store_backend,
-            cache_budget_bytes=cache_budget_bytes,
+            cache_budget_bytes=cache_budget_bytes, verify=verify,
         )
         store = CorpusStore(None, SAConfig(**manifest["sa_config"]),
                             backend=backend,

@@ -1,0 +1,17 @@
+"""BAD: raw publish renames outside the atomic-publish helper (SAL012 x3)."""
+import os
+import shutil
+
+
+def publish_manifest(tmp, final):
+    with open(tmp, "w") as f:
+        f.write("{}")
+    os.replace(tmp, final)  # line 9: SAL012
+
+
+def publish_run(tmp, final):
+    os.rename(tmp, final)  # line 13: SAL012
+
+
+def publish_tree(tmp_dir, final_dir):
+    shutil.move(tmp_dir, final_dir)  # line 17: SAL012

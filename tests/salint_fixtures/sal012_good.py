@@ -1,0 +1,12 @@
+"""GOOD: publishes routed through the sanctioned durable helper."""
+from repro.core.integrity import publish_dir, publish_file
+
+
+def publish_manifest(tmp, final):
+    with open(tmp, "w") as f:
+        f.write("{}")
+    publish_file(tmp, final)  # fsync tmp -> rename -> fsync parent dir
+
+
+def publish_tree(tmp_dir, final_dir):
+    publish_dir(tmp_dir, final_dir)

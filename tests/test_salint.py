@@ -190,6 +190,38 @@ def test_sal010_good_fixture(tmp_path):
                   R.Sal010WorkerDeviceAccounting()) == []
 
 
+def test_sal012_bad_fixture(tmp_path):
+    vs = _check(tmp_path, "sal012_bad.py", R.Sal012AtomicPublish())
+    assert [(v.rule_id, v.line) for v in vs] == [
+        ("SAL012", 9), ("SAL012", 13), ("SAL012", 17)]
+    assert "os.replace" in vs[0].message
+    assert "publish_file/publish_dir" in vs[0].message
+    assert "os.rename" in vs[1].message
+    assert "shutil.move" in vs[2].message
+
+
+def test_sal012_good_fixture(tmp_path):
+    assert _check(tmp_path, "sal012_good.py", R.Sal012AtomicPublish()) == []
+
+
+def test_sal012_skips_integrity_helper(tmp_path):
+    """The renames inside the sanctioned helper module itself are the one
+    place the raw calls belong."""
+    d = tmp_path / "core"
+    d.mkdir()
+    vs = _check(d, "sal012_bad.py", R.Sal012AtomicPublish(),
+                dest_name="integrity.py")
+    assert vs == []
+
+
+def test_sal012_skips_tests_dirs(tmp_path):
+    """Tests simulate torn publishes with raw renames on purpose."""
+    d = tmp_path / "tests"
+    d.mkdir()
+    vs = _check(d, "sal012_bad.py", R.Sal012AtomicPublish())
+    assert vs == []
+
+
 # ---------------------------------------------------------------------------
 # SAL011: kernel contract (fixture trees, scanned as a project)
 # ---------------------------------------------------------------------------

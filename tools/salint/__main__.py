@@ -21,7 +21,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     parser = argparse.ArgumentParser(
         prog="python -m tools.salint",
         description="Static analyzer for the repo's residency/kernel/"
-                    "threading invariants (rules SAL001-SAL011).",
+                    "threading/durability invariants (rules SAL001-SAL012).",
     )
     parser.add_argument(
         "paths", nargs="*", default=None,

@@ -70,7 +70,7 @@ LOCK_HINTS: Tuple[str, ...] = ("lock", "cond", "mutex", "sem")
 # ubiquitous container/queue/ndarray/str methods).  Underscore-prefixed
 # names are exempt from this list by construction.
 _SKIP_CALLEES: Set[str] = set(dir(builtins)) | {
-    "add", "append", "astype", "acquire", "clear", "copy", "decode",
+    "add", "append", "astype", "acquire", "clear", "close", "copy", "decode",
     "discard", "encode", "endswith", "extend", "fill", "flatten", "flush",
     "format", "get", "group", "index", "insert", "is_set", "item", "items",
     "join", "keys", "lower", "match", "move_to_end", "notify", "notify_all",

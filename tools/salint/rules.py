@@ -371,7 +371,7 @@ class Sal005UnownedHandles(Rule):
     rule_id = "SAL005"
     summary = ("every open()/np.memmap in build/serve paths is owned by "
                "_Scratch, _OutputSink, core/index_io.py, "
-               "data/chunk_store.py, or a context manager")
+               "data/chunk_store.py, core/journal.py, or a context manager")
     rationale = (
         "Build and serve paths run for hours and reopen indexes repeatedly; "
         "an unowned file handle or memmap leaks fds and — on the write side "
@@ -381,7 +381,8 @@ class Sal005UnownedHandles(Rule):
         "data/chunk_store.py modules (tmp+rename discipline)."
     )
 
-    ALLOWED_FILES = ("core/index_io.py", "data/chunk_store.py")
+    ALLOWED_FILES = ("core/index_io.py", "data/chunk_store.py",
+                     "core/journal.py")
     OWNER_CLASSES: ClassVar[Set[str]] = {"_Scratch", "_OutputSink"}
     CALLS: ClassVar[Set[str]] = {
         "open", "np.memmap", "numpy.memmap",
@@ -960,6 +961,47 @@ def _top_level_defs(ctx) -> Dict[str, ast.AST]:
             if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
 
 
+# ---------------------------------------------------------------------------
+# SAL012 — artifact publishes go through the sanctioned atomic helper
+# ---------------------------------------------------------------------------
+
+
+class Sal012AtomicPublish(Rule):
+    rule_id = "SAL012"
+    summary = ("artifact-publishing renames (os.replace/os.rename/"
+               "shutil.move) must go through "
+               "repro.core.integrity.publish_file/publish_dir")
+    rationale = (
+        "tmp + rename alone is not crash-safe: without an fsync of the tmp "
+        "file before the rename and of the parent directory after it, a "
+        "power loss can publish an empty or vanished artifact that a later "
+        "open trusts.  repro.core.integrity.publish_file/publish_dir own "
+        "the full durable sequence (fsync tmp -> rename -> fsync parent "
+        "dir); a raw rename elsewhere silently reintroduces the torn-"
+        "publish window the crash-safety tests close.  Tests simulating "
+        "torn writes are exempt; genuinely rebuildable state (e.g. a lint "
+        "cache) may suppress with a justification comment."
+    )
+
+    ALLOWED_FILES = ("core/integrity.py",)
+    RENAMES: ClassVar[Set[str]] = {
+        "os.replace", "os.rename", "os.renames", "shutil.move"}
+
+    def check(self, ctx: FileContext) -> Iterator[Violation]:
+        if ctx.endswith(*self.ALLOWED_FILES) or ctx.in_dir("tests"):
+            return
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if name in self.RENAMES:
+                yield violation_at(
+                    self.rule_id, ctx.path, node,
+                    f"raw '{name}' publish is not crash-durable; use "
+                    f"repro.core.integrity.publish_file/publish_dir "
+                    f"(fsync tmp -> rename -> fsync parent dir)")
+
+
 DEFAULT_RULES: Tuple[Rule, ...] = (
     Sal001KernelRegistry(),
     Sal002BackendReads(),
@@ -972,4 +1014,5 @@ DEFAULT_RULES: Tuple[Rule, ...] = (
     Sal009CrossContextState(),
     Sal010WorkerDeviceAccounting(),
     Sal011KernelContract(),
+    Sal012AtomicPublish(),
 )
